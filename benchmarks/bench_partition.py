@@ -1,0 +1,59 @@
+"""Paper Fig 3.2: mesh partition time per method vs mesh size.
+
+Paper claim: RTK fastest, then MSFC, PHG/HSFC; Zoltan/HSFC slower;
+graph methods and RCB slowest; geometric methods scale smoothly.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DynamicLoadBalancer
+from repro.core.graph_greedy import greedy_graph_partition
+
+P = 128
+
+
+def run(sizes=(20_000, 80_000, 320_000), repeats=3):
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in sizes:
+        coords = jnp.asarray(
+            (rng.random((n, 3)) * np.array([10.0, 1.0, 1.0])).astype(np.float32))
+        w = jnp.ones(n, jnp.float32)
+        for method in ["rtk", "msfc", "hsfc", "hsfc_zoltan", "rcb"]:
+            bal = DynamicLoadBalancer(P, method)
+            # warm up jit
+            bal.balance(w, coords=None if method == "rtk" else coords)
+            ts = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                r = bal.balance(w, coords=None if method == "rtk" else coords)
+                ts.append(time.perf_counter() - t0)
+            rows.append((f"fig3.2/partition_time/{method}/n{n}",
+                         min(ts) * 1e6, r.info["imbalance"]))
+    # graph greedy (ParMETIS stand-in) on the smallest size only (host BFS)
+    n = sizes[0]
+    coords = rng.random((n, 3))
+    pairs = _knn_pairs(coords, k=4)
+    t0 = time.perf_counter()
+    parts = greedy_graph_partition(n, pairs, np.ones(n), P)
+    dt = time.perf_counter() - t0
+    pw = np.bincount(parts, minlength=P)
+    rows.append((f"fig3.2/partition_time/graph_greedy/n{n}", dt * 1e6,
+                 pw.max() / pw.mean()))
+    return rows
+
+
+def _knn_pairs(coords, k=4):
+    """Approximate adjacency via grid-hash nearest neighbours."""
+    n = coords.shape[0]
+    key = np.floor(coords * 20).astype(np.int64)
+    order = np.lexsort((key[:, 2], key[:, 1], key[:, 0]))
+    pairs = []
+    for i in range(0, n - k, k):
+        blk = order[i:i + k + 1]
+        for a in range(len(blk) - 1):
+            pairs.append((blk[a], blk[a + 1]))
+    return np.asarray(pairs, np.int64)

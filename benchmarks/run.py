@@ -1,0 +1,51 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: python -m benchmarks.run [--quick]
+
+Each module maps to one paper table/figure (DESIGN.md section 8):
+    bench_partition       Fig 3.2   partition time per method/mesh size
+    bench_dlb             Fig 3.3   DLB time + migration (remap on/off)
+    bench_adaptive_solve  Fig 3.4/3.5 + Table 1   Example 3.1
+    bench_parabolic       Tables 2-3               Example 3.2
+    bench_aspect_ratio    section 2.2 PHG vs Zoltan box-map quality
+    bench_beyond          beyond-paper: MoE dispatch / packing / 1-D
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes for CI")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (bench_adaptive_solve, bench_aspect_ratio, bench_beyond,
+                   bench_dlb, bench_parabolic, bench_partition)
+
+    suites = {
+        "partition": lambda: bench_partition.run(
+            sizes=(20_000, 40_000) if args.quick else (20_000, 80_000,
+                                                       320_000)),
+        "dlb": bench_dlb.run,
+        "adaptive_solve": lambda: bench_adaptive_solve.run(
+            max_steps=3 if args.quick else 4),
+        "parabolic": lambda: bench_parabolic.run(
+            n_steps=2 if args.quick else 3),
+        "aspect_ratio": bench_aspect_ratio.run,
+        "beyond": bench_beyond.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            for row in fn():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            sys.stdout.flush()
+        except Exception as e:  # keep the harness running
+            print(f"{name}/ERROR,0,{e!r}")
+
+
+if __name__ == "__main__":
+    main()

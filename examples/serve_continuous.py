@@ -1,0 +1,46 @@
+"""End-to-end serving driver: continuous batching with DLB rebalancing.
+
+Decodes real tokens from a (small, randomly initialized) llama-family
+model with requests arriving continuously; every N steps the engine
+re-partitions live requests across simulated device groups using the
+paper's machinery (SFC-order 1-D partition + Oliker--Biswas remap) and
+reports migration volume.
+
+    PYTHONPATH=src python examples/serve_continuous.py
+"""
+import numpy as np
+
+import jax
+from repro.configs import get_smoke
+from repro.models import init_model
+from repro.serve import Request, ServeEngine
+
+
+def main():
+    rng = np.random.default_rng(0)
+    cfg = get_smoke("llama3_8b").replace(n_layers=4, d_model=256, n_heads=8,
+                                         n_kv_heads=4, head_dim=32, d_ff=512)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(params, cfg, slots=8, max_seq=128, n_groups=4,
+                      rebalance_every=8)
+
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab, rng.integers(4, 24)),
+                    max_new=int(rng.integers(8, 48)))
+            for i in range(24)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=600)
+
+    done = sum(r.done for r in reqs)
+    toks = sum(len(r.out) for r in reqs)
+    print(f"completed {done}/{len(reqs)} requests, {toks} tokens generated, "
+          f"{eng.step_count} engine steps")
+    print("rebalance log (paper technique live):")
+    for entry in eng.migration_log:
+        print(f"  step {entry['step']:4d}: imbalance={entry['imbalance']:.3f} "
+              f"migrated_kv_weight={entry['TotalV']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

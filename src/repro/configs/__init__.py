@@ -1,0 +1,57 @@
+"""Assigned architecture configs (--arch <id>) + shape registry.
+
+Each module exports CONFIG (the exact full-scale config from the
+assignment) and SMOKE (a reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from ..models.config import ModelConfig
+
+ARCH_IDS = [
+    "grok_1_314b",
+    "phi35_moe_42b",
+    "recurrentgemma_2b",
+    "h2o_danube3_4b",
+    "llama3_8b",
+    "h2o_danube_1_8b",
+    "command_r_plus_104b",
+    "whisper_medium",
+    "qwen2_vl_72b",
+    "mamba2_1_3b",
+]
+
+# shape cells: name -> (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# long_500k only for sub-quadratic attention archs (DESIGN.md section 5)
+LONG_OK = {"recurrentgemma_2b", "h2o_danube3_4b", "h2o_danube_1_8b",
+           "mamba2_1_3b"}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{arch}", __name__)
+    return mod.CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{arch}", __name__)
+    return mod.SMOKE
+
+
+def cells():
+    """All runnable (arch, shape) dry-run cells."""
+    out = []
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            if s == "long_500k" and a not in LONG_OK:
+                continue
+            out.append((a, s))
+    return out

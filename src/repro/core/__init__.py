@@ -1,0 +1,24 @@
+"""Core load-balancing library: the paper's contribution.
+
+Public API re-exports.
+"""
+from .balancer import BalanceResult, DynamicLoadBalancer
+from .metrics import imbalance, migration_volume, quality
+from .partition1d import (Partition1DResult, distributed_prefix_parts,
+                          exclusive_scan_over_axis, ksection,
+                          prefix_sum_parts, sorted_exact)
+from .rcb import rcb_partition
+from .remap import apply_map, greedy_map, greedy_map_jnp, remap, similarity_matrix
+from .rtree import RefinementForest, partition_dfs, rtk_partition_forest
+from .sfc import (bounding_box, box_map, hilbert_decode, hilbert_encode,
+                  morton_decode, morton_encode, sfc_keys)
+
+__all__ = [
+    "BalanceResult", "DynamicLoadBalancer", "Partition1DResult",
+    "RefinementForest", "apply_map", "bounding_box", "box_map",
+    "distributed_prefix_parts", "exclusive_scan_over_axis", "greedy_map",
+    "greedy_map_jnp", "hilbert_decode", "hilbert_encode", "imbalance",
+    "ksection", "migration_volume", "morton_decode", "morton_encode",
+    "partition_dfs", "prefix_sum_parts", "quality", "rcb_partition", "remap",
+    "rtk_partition_forest", "similarity_matrix", "sfc_keys", "sorted_exact",
+]

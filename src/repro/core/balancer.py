@@ -1,0 +1,121 @@
+"""DynamicLoadBalancer -- the paper's DLB pipeline as a composable API.
+
+partition (RTK / HSFC / MSFC / RCB / graph) -> submesh->process remap
+(Oliker--Biswas) -> migration plan + metrics.  This is the object the FEM
+adaptive loop, the MoE dispatch layer, the sequence packer and the serving
+rebalancer all call into.
+
+The balancer is *incremental by construction* for SFC/RTK methods (the
+paper's point): small mesh changes perturb prefix sums slightly, so part
+boundaries move slightly, so migration is small.  The remap step then
+relabels parts to processes to keep the retained fraction maximal.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import metrics as _metrics
+from . import remap as _remap
+from .partition1d import ksection, sorted_exact
+from .rcb import rcb_partition
+from .rtree import partition_dfs
+from .sfc import bounding_box, sfc_keys
+
+
+@dataclass
+class BalanceResult:
+    parts: jax.Array                 # (n,) process id per item
+    info: Dict                       # quality + migration metrics + timings
+
+
+class DynamicLoadBalancer:
+    """method in {'rtk', 'hsfc', 'msfc', 'hsfc_zoltan', 'rcb'}.
+
+    * rtk          prefix-sum refinement-tree (items must be in DFS order)
+    * hsfc / msfc  Hilbert / Morton SFC with PHG's uniform box map
+    * hsfc_zoltan  Hilbert with Zoltan's per-axis map (quality baseline)
+    * rcb          recursive coordinate bisection
+    """
+
+    def __init__(self, p: int, method: str = "hsfc", *,
+                 oneD: str = "sorted", k: int = 8, iters: int = 12,
+                 use_remap: bool = True, sfc_bits: int = 10):
+        self.p = p
+        self.method = method
+        self.oneD = oneD
+        self.k = k
+        self.iters = iters
+        self.use_remap = use_remap
+        self.sfc_bits = sfc_bits
+
+    # -- partitioning ------------------------------------------------------
+    def _partition(self, coords: Optional[jax.Array], weights: jax.Array,
+                   dfs_weights: Optional[jax.Array]) -> jax.Array:
+        m = self.method
+        if m == "rtk":
+            assert dfs_weights is not None or weights is not None
+            w = weights if dfs_weights is None else dfs_weights
+            return partition_dfs(w, self.p)
+        if m == "rcb":
+            return rcb_partition(coords, weights, self.p)
+        curve = "morton" if m == "msfc" else "hilbert"
+        uniform = (m != "hsfc_zoltan")
+        lo, hi = bounding_box(coords)
+        keys = sfc_keys(coords, lo, hi, curve=curve, uniform=uniform,
+                        bits=self.sfc_bits)
+        if self.oneD == "sorted":
+            return sorted_exact(keys, weights, self.p).parts
+        return ksection(keys, weights, self.p, k=self.k, iters=self.iters).parts
+
+    # -- full DLB step -----------------------------------------------------
+    def balance(self, weights: jax.Array, *,
+                coords: Optional[jax.Array] = None,
+                old_parts: Optional[jax.Array] = None,
+                adjacency: Optional[jax.Array] = None) -> BalanceResult:
+        n = int(weights.shape[0])
+        # pad to the next power-of-two bucket: adaptive meshes change size
+        # every step and unpadded shapes would trigger a jit recompile per
+        # step (zero-weight padding is invisible to every partitioner)
+        n_pad = 1 << max(int(np.ceil(np.log2(max(n, 2)))), 1)
+        padded = n_pad != n
+        if padded:
+            weights = jnp.concatenate(
+                [weights, jnp.zeros(n_pad - n, weights.dtype)])
+            if coords is not None:
+                tail = jnp.broadcast_to(coords[-1:], (n_pad - n, 3))
+                coords = jnp.concatenate([coords, tail])
+            if old_parts is not None:
+                old_parts = jnp.concatenate(
+                    [old_parts,
+                     jnp.zeros(n_pad - n, old_parts.dtype)])
+
+        t0 = time.perf_counter()
+        parts = self._partition(coords, weights, None)
+        parts = jax.block_until_ready(parts)
+        t_part = time.perf_counter() - t0
+
+        info: Dict = {}
+        t1 = time.perf_counter()
+        if old_parts is not None and self.use_remap:
+            parts, perm = _remap.remap(old_parts, parts, weights, self.p)
+            parts = jax.block_until_ready(parts)
+            info["remap_perm"] = perm
+        t_remap = time.perf_counter() - t1
+
+        q = _metrics.quality(parts, weights, self.p, adjacency)
+        info.update(imbalance=float(q.imbalance),
+                    part_weights=np.asarray(q.part_weights),
+                    cut=None if q.cut is None else int(q.cut),
+                    t_partition=t_part, t_remap=t_remap)
+        if old_parts is not None:
+            mv = _metrics.migration_volume(old_parts, parts, weights, self.p)
+            info.update({k: float(v) for k, v in mv.items()})
+        if padded:
+            parts = parts[:n]
+        return BalanceResult(parts, info)

@@ -1,0 +1,55 @@
+"""Recursive Coordinate Bisection (RCB) -- comparison baseline.
+
+Berger & Bokhari's geometric partitioner used in the paper's experiments
+(via Zoltan).  Recursively split the item set along the longest axis at the
+weighted median.  Implemented as a vectorized jnp routine: log2(p) rounds;
+in round r every current part is split in two simultaneously (one sort per
+round over all items).  p must be a power of two (the paper's runs are).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def rcb_partition(coords: jax.Array, weights: jax.Array, p: int) -> jax.Array:
+    """coords (n, 3), weights (n,) -> part ids (n,) int32.  p = 2^k."""
+    n = coords.shape[0]
+    k = p.bit_length() - 1
+    assert (1 << k) == p, "RCB requires p to be a power of two"
+    w = weights.astype(jnp.float32)
+    # Python loop over rounds keeps all segment sizes static: after round r
+    # there are 2^(r+1) parts, every part split simultaneously.
+    parts = jnp.zeros((n,), jnp.int32)
+    for r in range(k):
+        nparts = 1 << r
+        # per-part bounding boxes
+        mins = jnp.stack([
+            jax.ops.segment_min(coords[:, d].astype(jnp.float32), parts,
+                                num_segments=nparts) for d in range(3)], axis=1)
+        maxs = jnp.stack([
+            jax.ops.segment_max(coords[:, d].astype(jnp.float32), parts,
+                                num_segments=nparts) for d in range(3)], axis=1)
+        ext = maxs - mins                       # (nparts, 3)
+        axis_per_part = jnp.argmax(ext, axis=1)  # (nparts,)
+        # each item's split coordinate
+        ax = axis_per_part[parts]               # (n,)
+        c = jnp.take_along_axis(coords.astype(jnp.float32), ax[:, None], axis=1)[:, 0]
+        # weighted median per part: sort items by (part, coord), prefix-sum
+        # weights within part, split where cum >= half.
+        order = jnp.lexsort((c, parts))
+        ps, ws = parts[order], w[order]
+        cum = jnp.cumsum(ws)
+        # exclusive within-part prefix: subtract cum at part start
+        part_tot = jax.ops.segment_sum(ws, ps, num_segments=nparts)
+        part_start_cum = jnp.concatenate([jnp.zeros(1, jnp.float32),
+                                          jnp.cumsum(part_tot)])[:-1]
+        within = cum - part_start_cum[ps]       # inclusive within-part cumsum
+        half = 0.5 * part_tot[ps]
+        hi_side = within > half + 1e-12
+        new_ps = ps * 2 + hi_side.astype(jnp.int32)
+        parts = jnp.zeros_like(parts).at[order].set(new_ps)
+    return parts

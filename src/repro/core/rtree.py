@@ -1,0 +1,125 @@
+"""Refinement-tree (RTK) partitioning -- paper section 2.1, Algorithm 1.
+
+Mitchell's refinement-tree method orders leaf elements by a depth-first
+traversal of the refinement tree (left child first); consecutive leaves
+share a face, so contiguous runs of the DFS order make good parts.  The
+paper's contribution is the prefix-sum reformulation:
+
+    S_i = sum_{j<i} w_j            (eq. 1)
+    leaf i -> part j  iff  S_i in [W*j/p, W*(j+1)/p)
+
+computed with two tree traversals + one MPI_Scan, O(N) total.
+
+In this JAX port the DFS order is *materialized* as the element-array
+order: the AMR module (`repro.fem.refine`) replaces a bisected parent by
+its two children **in place, adjacently** (left child at the parent's
+index), which is exactly a DFS linearization of the growing binary forest.
+Root order is fixed once at mesh creation and never changes, satisfying the
+paper's ordering invariant.  Partitioning a mesh therefore never touches
+tree pointers -- it is a single ``cumsum`` over the leaf weight array
+(``partition_dfs``), or the two-pass + scan form across shards
+(``partition1d.distributed_prefix_parts``).
+
+``RefinementForest`` below is the explicit (host-side, numpy) tree kept by
+the FEM substrate -- the analogue of PHG's stored refinement tree.  It
+exists for coarsening and for tests that check the DFS-materialization
+claim against a real traversal.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .partition1d import prefix_sum_parts
+
+
+def partition_dfs(leaf_weights_dfs: jax.Array, p: int) -> jax.Array:
+    """RTK partition of leaves given in DFS order.  Pure Algorithm 1."""
+    return prefix_sum_parts(leaf_weights_dfs, p)
+
+
+@dataclass
+class RefinementForest:
+    """Append-only binary refinement forest (host side, like PHG's tree).
+
+    Node arrays grow as elements are bisected; leaves form the active mesh.
+    ``child0/child1 == -1`` marks a leaf.  Roots are the initial elements,
+    in fixed creation order (the paper's root ordering invariant).
+    """
+    parent: np.ndarray = field(default_factory=lambda: np.empty(0, np.int64))
+    child0: np.ndarray = field(default_factory=lambda: np.empty(0, np.int64))
+    child1: np.ndarray = field(default_factory=lambda: np.empty(0, np.int64))
+    n_roots: int = 0
+
+    @classmethod
+    def from_roots(cls, n_roots: int) -> "RefinementForest":
+        return cls(parent=np.full(n_roots, -1, np.int64),
+                   child0=np.full(n_roots, -1, np.int64),
+                   child1=np.full(n_roots, -1, np.int64),
+                   n_roots=n_roots)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.parent.shape[0]
+
+    def split(self, nodes: np.ndarray) -> np.ndarray:
+        """Bisect ``nodes`` (must be leaves).  Returns (m, 2) child ids."""
+        nodes = np.asarray(nodes, np.int64)
+        assert (self.child0[nodes] == -1).all(), "split of non-leaf"
+        m = nodes.shape[0]
+        base = self.n_nodes
+        kids = base + np.arange(2 * m, dtype=np.int64).reshape(m, 2)
+        self.parent = np.concatenate([self.parent, np.repeat(nodes, 2)])
+        self.child0 = np.concatenate([self.child0, np.full(2 * m, -1, np.int64)])
+        self.child1 = np.concatenate([self.child1, np.full(2 * m, -1, np.int64)])
+        self.child0[nodes] = kids[:, 0]
+        self.child1[nodes] = kids[:, 1]
+        return kids
+
+    def coarsen(self, parents: np.ndarray) -> None:
+        """Undo the split of ``parents`` (children must be leaves).
+
+        The children stay in the arrays (append-only) but are detached;
+        the parent becomes a leaf again."""
+        parents = np.asarray(parents, np.int64)
+        c0, c1 = self.child0[parents], self.child1[parents]
+        assert (c0 >= 0).all()
+        assert (self.child0[c0] == -1).all() and (self.child0[c1] == -1).all()
+        self.child0[parents] = -1
+        self.child1[parents] = -1
+
+    def leaves_dfs(self) -> np.ndarray:
+        """Leaf node ids in DFS order (left child first, roots in order).
+
+        Reference traversal -- O(N) iterative stack walk.  The FEM module
+        maintains this order implicitly; tests compare the two.
+        """
+        out: List[int] = []
+        stack: List[int] = list(range(self.n_roots - 1, -1, -1))
+        c0, c1 = self.child0, self.child1
+        while stack:
+            n = stack.pop()
+            if c0[n] == -1:
+                out.append(n)
+            else:
+                stack.append(int(c1[n]))
+                stack.append(int(c0[n]))
+        return np.asarray(out, np.int64)
+
+    def leaf_count(self) -> int:
+        return int((self.child0 == -1).sum())
+
+
+def rtk_partition_forest(forest: RefinementForest, weights_by_node: np.ndarray,
+                         p: int) -> np.ndarray:
+    """Full RTK on an explicit forest: traverse for DFS order, then Alg. 1.
+
+    Returns part id per leaf (aligned with ``forest.leaves_dfs()`` order).
+    """
+    order = forest.leaves_dfs()
+    w = jnp.asarray(weights_by_node[order])
+    return np.asarray(partition_dfs(w, p))

@@ -1,0 +1,3 @@
+"""Data pipeline: synthetic corpus + load-balanced packing."""
+from .packing import (SyntheticCorpus, attention_cost, balanced_pack,
+                      greedy_pack, pack_batches)

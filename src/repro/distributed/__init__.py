@@ -1,0 +1,4 @@
+"""Distribution: logical sharding rules, mesh helpers."""
+from .sharding import (Boxed, DEFAULT_RULES, axes_tree, box, logical,
+                       pspec_tree, set_rules, spec_for, stack_axes, unbox,
+                       use_rules)

@@ -1,0 +1,135 @@
+"""Logical-axis sharding rules (MaxText-style) + boxed parameters.
+
+Model code annotates arrays with *logical* axis names ("batch", "embed",
+"heads", ...).  A rules table maps logical names to mesh axes; when no
+rules are installed (single-device smoke tests) every annotation is a
+no-op.  Parameters are created *boxed* (value + logical axes) so the
+PartitionSpec tree for pjit falls out of the same structure that built the
+weights -- no drift between init and sharding.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    # parameters
+    "layers": None,
+    "expert": "model",
+    # optimizer-state extra sharding (ZeRO): fold data into the first
+    # tensor-parallel-free dim -- handled in train.optimizer.
+}
+
+
+def set_rules(rules: Optional[dict]) -> None:
+    _state.rules = rules
+
+
+def get_rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+def set_mesh(mesh) -> None:
+    """Install the concrete Mesh for layers that build shard_map regions
+    (expert-parallel MoE).  None = single-device paths."""
+    _state.mesh = mesh
+
+
+def get_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[dict], mesh=None):
+    prev = get_rules()
+    prev_mesh = get_mesh()
+    set_rules(rules)
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_rules(prev)
+        set_mesh(prev_mesh)
+
+
+def spec_for(axes: Sequence[Optional[str]], rules: Optional[dict] = None) -> P:
+    rules = rules if rules is not None else get_rules()
+    if rules is None:
+        return P()
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def logical(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a with_sharding_constraint if rules are installed."""
+    rules = get_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec_for(axes, rules))
+
+
+# ---------------------------------------------------------------------------
+# Boxed params
+# ---------------------------------------------------------------------------
+
+class Boxed(NamedTuple):
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+jax.tree_util.register_pytree_node(
+    Boxed,
+    lambda b: ((b.value,), b.axes),
+    lambda axes, vals: Boxed(vals[0], axes),
+)
+
+
+def box(value: jax.Array, axes: Tuple[Optional[str], ...]) -> Boxed:
+    assert value.ndim == len(axes), (value.shape, axes)
+    return Boxed(value, axes)
+
+
+def _is_boxed(x):
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    """Strip boxes -> raw value tree."""
+    return jax.tree.map(lambda b: b.value if _is_boxed(b) else b, tree,
+                        is_leaf=_is_boxed)
+
+
+def axes_tree(tree):
+    """Boxed tree -> tree of logical-axis tuples."""
+    return jax.tree.map(lambda b: b.axes if _is_boxed(b) else None, tree,
+                        is_leaf=_is_boxed)
+
+
+def pspec_tree(tree, rules: Optional[dict] = None):
+    """Boxed tree -> tree of PartitionSpec."""
+    return jax.tree.map(
+        lambda b: spec_for(b.axes, rules) if _is_boxed(b) else P(),
+        tree, is_leaf=_is_boxed)
+
+
+def stack_axes(tree, prefix: str = "layers"):
+    """Prepend a stacking axis name (for scan-over-layers vmapped init)."""
+    return jax.tree.map(
+        lambda b: Boxed(b.value, (prefix,) + b.axes) if _is_boxed(b) else b,
+        tree, is_leaf=_is_boxed)

@@ -1,0 +1,11 @@
+"""Adaptive FEM substrate (the paper's host application) in JAX."""
+from .adapt import (AdaptiveResult, StepStats, solve_helmholtz_adaptive,
+                    solve_parabolic_adaptive, transfer_p1)
+from .assemble import (P1Elements, build_elements, element_gradients,
+                       load_vector, mass_matvec, operator_diagonal,
+                       stiffness_matvec)
+from .estimate import doerfler_mark, threshold_coarsen_mark, zz_estimate
+from .mesh import Mesh, cylinder_mesh, kuhn_box_mesh, unit_cube_mesh
+from .problems import HelmholtzProblem, ParabolicProblem
+from .refine import coarsen, refine, uniform_refine
+from .solve import CGResult, pcg, solve_dirichlet

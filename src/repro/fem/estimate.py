@@ -1,0 +1,61 @@
+"""A-posteriori error estimation + Doerfler marking.
+
+Zienkiewicz--Zhu gradient-recovery estimator: recover a nodal gradient
+G(u_h) by volume-weighted averaging of the piecewise-constant element
+gradients, then
+
+    eta_T^2 = || grad u_h - G(u_h) ||^2_{L2(T)}
+
+evaluated with the vertex rule.  Cheap (two segment-sums), robust, and the
+standard driver for AMR when jump terms are inconvenient.
+
+Doerfler (bulk) marking: smallest set M with sum_{T in M} eta_T^2 >=
+theta * sum eta_T^2.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .assemble import P1Elements, element_gradients
+
+
+def zz_estimate(el: P1Elements, u: jax.Array) -> jax.Array:
+    """Per-element eta_T (not squared)."""
+    gt = element_gradients(el, u)                       # (nt, 3)
+    # volume-weighted nodal average of element gradients
+    wv = el.vol[:, None]                                # (nt, 1)
+    flat_ids = el.tets.reshape(-1)
+    num = jax.ops.segment_sum(
+        jnp.repeat(gt * wv, 4, axis=0), flat_ids, num_segments=el.n_verts)
+    den = jax.ops.segment_sum(
+        jnp.repeat(el.vol, 4), flat_ids, num_segments=el.n_verts)
+    gnode = num / jnp.maximum(den, 1e-30)[:, None]      # (nv, 3)
+    # eta_T^2 = V/4 sum_{vertices} |gt - gnode(v)|^2   (vertex rule)
+    gv = gnode[el.tets]                                 # (nt, 4, 3)
+    diff = gv - gt[:, None, :]
+    eta2 = jnp.sum(diff * diff, axis=(1, 2)) * el.vol / 4.0
+    return jnp.sqrt(eta2)
+
+
+def doerfler_mark(eta: np.ndarray, theta: float = 0.5) -> np.ndarray:
+    """Bool mask of marked elements (host side)."""
+    eta2 = np.asarray(eta, np.float64) ** 2
+    order = np.argsort(-eta2)
+    csum = np.cumsum(eta2[order])
+    total = csum[-1] if csum.size else 0.0
+    k = int(np.searchsorted(csum, theta * total)) + 1
+    marked = np.zeros(eta2.shape[0], bool)
+    marked[order[:k]] = True
+    return marked
+
+
+def threshold_coarsen_mark(eta: np.ndarray, frac: float = 0.05) -> np.ndarray:
+    """Mark elements with eta below ``frac`` * mean for coarsening."""
+    eta = np.asarray(eta, np.float64)
+    if eta.size == 0:
+        return np.zeros(0, bool)
+    return eta < frac * max(eta.mean(), 1e-300)

@@ -1,0 +1,87 @@
+"""Jacobi-preconditioned CG, pure JAX (jit + while_loop).
+
+Solves (A + c M) u = b with Dirichlet dofs pinned: the operator acts on
+free dofs only (boundary rows/cols masked), boundary values folded into
+the right-hand side by the caller (see ``dirichlet_rhs``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .assemble import P1Elements, operator_diagonal, stiffness_matvec
+
+
+class CGResult(NamedTuple):
+    x: jax.Array
+    iters: jax.Array
+    residual: jax.Array
+
+
+def pcg(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,
+        diag: jax.Array, x0: jax.Array, *, tol: float = 1e-8,
+        maxiter: int = 2000) -> CGResult:
+    """Standard PCG with Jacobi preconditioner M = diag."""
+    inv_d = jnp.where(diag > 0, 1.0 / diag, 0.0)
+
+    def prec(r):
+        return r * inv_d
+
+    r0 = b - matvec(x0)
+    z0 = prec(r0)
+    p0 = z0
+    rz0 = jnp.vdot(r0, z0)
+    bnorm = jnp.maximum(jnp.linalg.norm(b), 1e-30)
+
+    def cond(state):
+        x, r, p, rz, it = state
+        return (jnp.linalg.norm(r) > tol * bnorm) & (it < maxiter)
+
+    def body(state):
+        x, r, p, rz, it = state
+        ap = matvec(p)
+        alpha = rz / jnp.maximum(jnp.vdot(p, ap), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = prec(r)
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / jnp.maximum(rz, 1e-30)
+        p = z + beta * p
+        return x, r, p, rz_new, it + 1
+
+    x, r, p, rz, it = jax.lax.while_loop(
+        cond, body, (x0, r0, p0, rz0, jnp.zeros((), jnp.int32)))
+    return CGResult(x, it, jnp.linalg.norm(r) / bnorm)
+
+
+def masked_operator(el: P1Elements, free: jax.Array, c: float
+                    ) -> Tuple[Callable, jax.Array]:
+    """Operator restricted to free dofs (Dirichlet rows/cols zeroed,
+    identity on pinned dofs) + its diagonal."""
+
+    def op(u):
+        au = stiffness_matvec(el, u * free, c)
+        return jnp.where(free > 0, au, u)
+
+    diag = jnp.where(free > 0, operator_diagonal(el, c), 1.0)
+    return op, diag
+
+
+def solve_dirichlet(el: P1Elements, rhs: jax.Array, g: jax.Array,
+                    free: jax.Array, c: float, *, tol: float = 1e-8,
+                    maxiter: int = 2000) -> CGResult:
+    """Solve (A + cM) u = rhs with u = g on pinned dofs.
+
+    rhs must already be the raw load vector; boundary lifting is applied
+    here: solve for w = u - g_ext with homogeneous BCs.
+    """
+    g_ext = jnp.where(free > 0, 0.0, g)
+    lift = stiffness_matvec(el, g_ext, c)
+    b = jnp.where(free > 0, rhs - lift, 0.0)
+    op, diag = masked_operator(el, free, c)
+    x0 = jnp.zeros_like(b)
+    res = pcg(op, b, diag, x0, tol=tol, maxiter=maxiter)
+    return CGResult(res.x + g_ext, res.iters, res.residual)

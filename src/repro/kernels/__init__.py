@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three pieces (assignment contract):
+  <name>.py   pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py      jit'd public wrappers (backend dispatch; library code
+              calls these, never kernels directly)
+  ref.py      pure-jnp oracles (the allclose ground truth)
+
+Kernels:
+  sfc_keys         Morton/Hilbert key generation -- the paper's
+                   partitioning hot spot (bit ops over VMEM tiles)
+  prefix_scan      blocked exclusive prefix sum -- Algorithm 1's S_i /
+                   MoE capacity offsets (VMEM carry across grid steps)
+  flash_attention  blocked online-softmax attention (causal/SWA/GQA) --
+                   the LM substrate's dominant compute at 32k prefill
+
+All validated in interpret mode on CPU (tests/test_kernels.py) over
+shape/dtype sweeps; compiled BlockSpecs target the TPU MXU/VPU layouts.
+"""
+from .ops import exclusive_scan_op, flash_attention_op, sfc_keys_op

@@ -1,0 +1,72 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Each op dispatches between the Pallas kernel (TPU target; interpret mode on
+CPU when explicitly requested) and the pure-jnp oracle.  Library code calls
+these wrappers, never the kernels directly, so the backend choice is a
+config knob (``use_pallas``) and CPU tests/benches run the oracle path by
+default.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .flash_attention import flash_attention_pallas
+from .prefix_scan import exclusive_scan_pallas
+from .sfc_keys import sfc_keys_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    return x, n
+
+
+def sfc_keys_op(grid: jax.Array, *, curve: str = "hilbert", bits: int = 10,
+                use_pallas: Optional[bool] = None,
+                interpret: bool = False) -> jax.Array:
+    """(n, 3) integer grid coords -> (n,) keys."""
+    if use_pallas is None:
+        use_pallas = _ON_TPU
+    if not use_pallas:
+        fn = _ref.hilbert_keys_ref if curve == "hilbert" else _ref.morton_keys_ref
+        return fn(grid.astype(jnp.uint32), bits)
+    g = grid.astype(jnp.int32)
+    x, n = _pad_to(g[:, 0], 1024)
+    y, _ = _pad_to(g[:, 1], 1024)
+    z, _ = _pad_to(g[:, 2], 1024)
+    keys = sfc_keys_pallas(x, y, z, curve=curve, bits=bits,
+                           interpret=interpret or not _ON_TPU)
+    return keys[:n].astype(jnp.uint32)
+
+
+def exclusive_scan_op(x: jax.Array, *, use_pallas: Optional[bool] = None,
+                      interpret: bool = False) -> jax.Array:
+    """Exclusive prefix sum (Algorithm 1 S_i) over (n,)."""
+    if use_pallas is None:
+        use_pallas = _ON_TPU
+    if not use_pallas:
+        return _ref.exclusive_scan_ref(x)
+    xp, n = _pad_to(x.astype(jnp.float32), 2048)
+    return exclusive_scan_pallas(xp, interpret=interpret or not _ON_TPU)[:n]
+
+
+def flash_attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True, window: Optional[int] = None,
+                       use_pallas: Optional[bool] = None,
+                       interpret: bool = False) -> jax.Array:
+    """Blocked attention; falls back to the jnp reference off-TPU."""
+    if use_pallas is None:
+        use_pallas = _ON_TPU
+    if not use_pallas:
+        return _ref.mha_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=interpret or not _ON_TPU)

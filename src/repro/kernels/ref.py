@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import sfc as _sfc
+
+
+# --- sfc_keys --------------------------------------------------------------
+
+def morton_keys_ref(grid: jax.Array, bits: int = 10) -> jax.Array:
+    return _sfc.morton_encode(grid, bits)
+
+
+def hilbert_keys_ref(grid: jax.Array, bits: int = 10) -> jax.Array:
+    return _sfc.hilbert_encode(grid, bits)
+
+
+# --- prefix_scan -----------------------------------------------------------
+
+def exclusive_scan_ref(x: jax.Array) -> jax.Array:
+    """Exclusive prefix sum along the last axis (Algorithm 1's S_i)."""
+    return jnp.cumsum(x, axis=-1) - x
+
+
+# --- flash_attention -------------------------------------------------------
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True, window: int | None = None,
+            scale: float | None = None) -> jax.Array:
+    """Reference attention.  q: (b, hq, s, d), k/v: (b, hkv, s, d).
+
+    GQA: query head h reads kv head h // (hq // hkv).  fp32 softmax.
+    ``window``: sliding-window attention -- key j visible from query i iff
+    i - window < j <= i (combined with causal).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhid,bhjd->bhij", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= j > i - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhij,bhjd->bhid", p, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

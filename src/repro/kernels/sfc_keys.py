@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: SFC key generation (Morton + Hilbert).
+
+The paper's partitioning hot spot is computing one curve key per mesh
+element (millions of elements, pure integer bit manipulation) -- an
+embarrassingly parallel, memory-bound op that belongs on the VPU.
+
+TPU adaptation (DESIGN.md section 2): the CPU implementations loop over
+elements; here a Pallas kernel streams coordinate tiles HBM -> VMEM and
+applies the bit transforms vectorized.  Tiles are (8, 128) multiples
+(VPU lane layout); coordinates arrive as three planar int32 arrays
+(SoA -- interleaved xyz would waste a transpose inside the kernel).
+
+The kernel body is shared with the pure-jnp oracle up to jnp<->pl load
+boundaries; correctness is asserted against ``repro.kernels.ref`` over
+shape/dtype sweeps in interpret mode (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024  # elements per tile; 8 sublanes x 128 lanes
+
+
+def _morton_body(x, y, z):
+    def part1by2(v):
+        v = v & 0x3FF
+        v = (v | (v << 16)) & 0x030000FF
+        v = (v | (v << 8)) & 0x0300F00F
+        v = (v | (v << 4)) & 0x030C30C3
+        v = (v | (v << 2)) & 0x09249249
+        return v
+    return part1by2(x) | (part1by2(y) << 1) | (part1by2(z) << 2)
+
+
+def _hilbert_body(x0, x1, x2, bits: int):
+    """Skilling AxesToTranspose + bit interleave, int32 arithmetic."""
+    q = 1 << (bits - 1)
+    while q > 1:
+        p = q - 1
+        # i = 0: exchange with self == invert when bit set
+        x0 = jnp.where((x0 & q) != 0, x0 ^ p, x0)
+        for which in (1, 2):
+            xi = x1 if which == 1 else x2
+            cond = (xi & q) != 0
+            t = (x0 ^ xi) & p
+            new_x0 = jnp.where(cond, x0 ^ p, x0 ^ t)
+            new_xi = jnp.where(cond, xi, xi ^ t)
+            x0 = new_x0
+            if which == 1:
+                x1 = new_xi
+            else:
+                x2 = new_xi
+        q >>= 1
+    # Gray encode
+    x1 = x1 ^ x0
+    x2 = x2 ^ x1
+    t = jnp.zeros_like(x0)
+    q = 1 << (bits - 1)
+    while q > 1:
+        t = jnp.where((x2 & q) != 0, t ^ (q - 1), t)
+        q >>= 1
+    x0, x1, x2 = x0 ^ t, x1 ^ t, x2 ^ t
+    # interleave transpose form: key bit (3b + 2 - axis) <- axis bit b
+    key = jnp.zeros_like(x0)
+    for b in range(bits):
+        key = key | (((x0 >> b) & 1) << (3 * b + 2))
+        key = key | (((x1 >> b) & 1) << (3 * b + 1))
+        key = key | (((x2 >> b) & 1) << (3 * b + 0))
+    return key
+
+
+def _sfc_kernel(x_ref, y_ref, z_ref, out_ref, *, curve: str, bits: int):
+    x = x_ref[...].astype(jnp.int32)
+    y = y_ref[...].astype(jnp.int32)
+    z = z_ref[...].astype(jnp.int32)
+    if curve == "morton":
+        out_ref[...] = _morton_body(x, y, z)
+    else:
+        out_ref[...] = _hilbert_body(x, y, z, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("curve", "bits", "interpret",
+                                             "block"))
+def sfc_keys_pallas(x: jax.Array, y: jax.Array, z: jax.Array, *,
+                    curve: str = "hilbert", bits: int = 10,
+                    interpret: bool = False, block: int = BLOCK) -> jax.Array:
+    """Planar int32 grid coords (n,) x3 -> int32 keys (n,).
+
+    n must be a multiple of ``block`` (callers pad; see ops.sfc_keys_op).
+    """
+    n = x.shape[0]
+    assert n % block == 0, f"n={n} not a multiple of block={block}"
+    rows = n // block
+    x2 = x.reshape(rows, block)
+    y2 = y.reshape(rows, block)
+    z2 = z.reshape(rows, block)
+    spec = pl.BlockSpec((1, block), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_sfc_kernel, curve=curve, bits=bits),
+        grid=(rows,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, block), jnp.int32),
+        interpret=interpret,
+    )(x2, y2, z2)
+    return out.reshape(n)

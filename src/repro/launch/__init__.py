@@ -1,0 +1,7 @@
+"""Launchers: production mesh, multi-pod dry-run, roofline analysis.
+
+NOTE: do not import ``dryrun`` from library code -- importing it sets
+XLA_FLAGS for 512 placeholder devices (it must be the first jax-touching
+import of its process).
+"""
+from .mesh import arch_rules, decode_rules, make_production_mesh

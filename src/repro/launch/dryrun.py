@@ -1,0 +1,439 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be imported/run before any other jax usage: the first two lines pin
+the 512 placeholder host devices (jax locks the device count on first
+init).  Do NOT set this flag anywhere global (conftest/pyproject): smoke
+tests and benches see 1 device.
+
+Per cell, two artifacts feed EXPERIMENTS.md:
+
+  A. **FLOP/byte accounting** -- ``.lower()`` with every layer scan
+     unrolled (``scan_unroll=True``) and ``lowered.cost_analysis()``;
+     XLA's analysis counts while bodies once, so unrolling is the only
+     honest way to count all layers.  Lowering is cheap (no backend
+     compile); values are GLOBAL (pre-partitioning) and divided by chip
+     count downstream.
+  B. **Compile proof + memory + collectives** -- full
+     ``.lower().compile()`` of the production (scanned, remat) step on
+     the 16x16 mesh AND the 2x16x16 multi-pod mesh;
+     ``compiled.memory_analysis()`` proves per-chip fit and the post-SPMD
+     HLO is parsed with loop-trip-count-aware collective accounting
+     (launch/hlo_analysis.py).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse                                              # noqa: E402
+import json                                                  # noqa: E402
+import time                                                  # noqa: E402
+import traceback                                             # noqa: E402
+from typing import Dict, Optional, Tuple                     # noqa: E402
+
+import jax                                                   # noqa: E402
+import jax.numpy as jnp                                      # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
+
+from ..configs import ARCH_IDS, LONG_OK, SHAPES, get_config  # noqa: E402
+from ..distributed.sharding import (Boxed, spec_for,         # noqa: E402
+                                    use_rules)
+from ..models import ModelConfig, init_model, loss_fn        # noqa: E402
+from ..serve import decode as serve_decode                   # noqa: E402
+from ..train import (AdamWConfig, adamw_update,              # noqa: E402
+                     init_opt_state, zero_pspec)
+from .hlo_analysis import collective_bytes                   # noqa: E402
+from .mesh import arch_rules, decode_rules, make_production_mesh  # noqa: E402
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, never allocated)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: str, shape_name: str, cfg: ModelConfig) -> Dict:
+    """Model inputs for a cell as ShapeDtypeStructs."""
+    seq, gb, kind = SHAPES[shape_name]
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if kind in ("train", "prefill"):
+        batch = {}
+        s_text = seq
+        if cfg.family == "vlm":
+            n_p = cfg.vision_patches
+            s_text = seq - n_p
+            batch["patch_embeds"] = sds((gb, n_p, cfg.d_model), cfg.act_dtype)
+        if cfg.family == "encdec":
+            batch["frames"] = sds((gb, cfg.enc_seq, cfg.d_model),
+                                  cfg.act_dtype)
+        batch["tokens"] = sds((gb, s_text), i32)
+        if kind == "train":
+            batch["labels"] = sds((gb, s_text), i32)
+        return batch
+    return {"tokens": sds((gb, 1), i32)}
+
+
+def batch_pspecs(batch: Dict, rules: Dict, mesh) -> Dict:
+    out = {}
+    for k, v in batch.items():
+        if k in ("tokens", "labels"):
+            spec = spec_for(("batch", None), rules)
+        else:  # frames / patch_embeds
+            spec = spec_for(("batch", None, None), rules)
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def boxed_shardings(tree, rules: Dict, mesh):
+    return jax.tree.map(
+        lambda b: NamedSharding(mesh, spec_for(b.axes, rules))
+        if isinstance(b, Boxed) else NamedSharding(mesh, P()),
+        tree, is_leaf=lambda x: isinstance(x, Boxed))
+
+
+def _ns(mesh, rules, axes):
+    return NamedSharding(mesh, spec_for(axes, rules))
+
+
+def decode_state_shardings(state, cfg: ModelConfig, rules: Dict, mesh):
+    """Sharding tree matching a decode-state pytree (by container type)."""
+    KV = serve_decode.KVCache
+
+    def kv_shard(c: KV):
+        return KV(
+            k=_ns(mesh, rules, (None, "batch", "kv_heads", "cache_seq",
+                                "head_dim")),
+            v=_ns(mesh, rules, (None, "batch", "kv_heads", "cache_seq",
+                                "head_dim")),
+            stored_pos=_ns(mesh, rules, ("batch", "cache_seq")),
+            pos=_ns(mesh, rules, ("batch",)))
+
+    if isinstance(state, KV):
+        return kv_shard(state)
+    if isinstance(state, serve_decode.SSMState):
+        return serve_decode.SSMState(
+            layers=type(state.layers)(
+                state=_ns(mesh, rules, (None, "batch", "heads", None, None)),
+                conv=_ns(mesh, rules, (None, "batch", "mlp", None))),
+            pos=_ns(mesh, rules, ("batch",)))
+    if isinstance(state, serve_decode.HybridState):
+        layers = []
+        for c in state.layers:
+            if isinstance(c, KV):
+                layers.append(kv_shard(c))
+            else:  # RGLRUCache
+                layers.append(type(c)(
+                    h=_ns(mesh, rules, ("batch", "mlp")),
+                    conv=_ns(mesh, rules, ("batch", "mlp", None))))
+        return serve_decode.HybridState(tuple(layers),
+                                        _ns(mesh, rules, ("batch",)))
+    if isinstance(state, serve_decode.EncDecState):
+        return serve_decode.EncDecState(
+            self_kv=kv_shard(state.self_kv),
+            cross_k=_ns(mesh, rules, (None, "batch", "kv_heads", None,
+                                      "head_dim")),
+            cross_v=_ns(mesh, rules, (None, "batch", "kv_heads", None,
+                                      "head_dim")),
+            pos=_ns(mesh, rules, ("batch",)))
+    raise TypeError(type(state))
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def _dryrun_cfg(cfg: ModelConfig, unroll: bool) -> ModelConfig:
+    kw = dict(dtype="bfloat16", param_dtype="bfloat16", remat=True,
+              scan_unroll=unroll, tp_shardmap=True,
+              causal_blocked_attn=True)
+    if cfg.n_experts > 0:
+        kw["ep_shards"] = 16   # shard_map expert parallelism on the pod
+    return cfg.replace(**kw)
+
+
+def cfg_accum(cfg: ModelConfig) -> int:
+    """Gradient-accumulation depth for train cells: larger models need
+    smaller live microbatches to fit the 16 GB/chip budget."""
+    n = cfg.n_params()
+    if n > 60e9:
+        return 8
+    if n > 3e9:
+        return 4
+    return 2
+
+
+def _accumulated_grads(params, batch, cfg: ModelConfig, accum: int):
+    """Microbatched value_and_grad with fp32 grad accumulation.
+
+    Python loop over microbatches (trace-time unrolled) so phase-A cost
+    analysis counts every microbatch; XLA reuses the per-microbatch
+    computation body.
+    """
+    def split(v):
+        b = v.shape[0]
+        return v.reshape((accum, b // accum) + v.shape[1:])
+
+    micro = {k: split(v) for k, v in batch.items()}
+    grads = None
+    loss_sum = jnp.zeros((), jnp.float32)
+    for i in range(accum):
+        mb = {k: v[i] for k, v in micro.items()}
+        li, gi = jax.value_and_grad(lambda p: loss_fn(p, mb, cfg))(params)
+        gi32 = jax.tree.map(
+            lambda b: Boxed(b.value.astype(jnp.float32), b.axes)
+            if isinstance(b, Boxed) else b,
+            gi, is_leaf=lambda x: isinstance(x, Boxed))
+        if grads is None:
+            grads = gi32
+        else:
+            grads = jax.tree.map(
+                lambda a, b: Boxed(a.value + b.value, a.axes)
+                if isinstance(a, Boxed) else a + b,
+                grads, gi32, is_leaf=lambda x: isinstance(x, Boxed))
+        loss_sum = loss_sum + li
+    scale = 1.0 / accum
+    grads = jax.tree.map(
+        lambda b: Boxed(b.value * scale, b.axes)
+        if isinstance(b, Boxed) else b * scale,
+        grads, is_leaf=lambda x: isinstance(x, Boxed))
+    return loss_sum * scale, grads
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool, unroll: bool,
+               cfg_override: Optional[ModelConfig] = None,
+               rules_override: Optional[Dict] = None):
+    """Returns (jitted_fn, example_args) ready to .lower(*args)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    base = cfg_override or get_config(arch)
+    cfg = _dryrun_cfg(base, unroll)
+    seq, gb, kind = SHAPES[shape_name]
+
+    if kind == "train":
+        big = cfg.n_params() * 16 > 256 * 16e9 * 0.8
+        ocfg = AdamWConfig(adam_dtype="bfloat16" if big else "float32")
+        rules = rules_override or arch_rules(arch, cfg, multi_pod=multi_pod)
+        rules.setdefault("cache_seq", None)
+        with use_rules(rules, mesh):
+            p_shape = jax.eval_shape(lambda k: init_model(cfg, k), KEY)
+            o_shape = jax.eval_shape(lambda p: init_opt_state(p, ocfg),
+                                     p_shape)
+            p_shard = boxed_shardings(p_shape, rules, mesh)
+            data_ax = ("pod", "data") if multi_pod else ("data",)
+            data_size = 16 * (2 if multi_pod else 1)
+            mv_spec = zero_pspec(o_shape.m, rules, data_ax, data_size)
+            mv_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), mv_spec,
+                                    is_leaf=lambda x: isinstance(x, P))
+            o_shard = type(o_shape)(step=NamedSharding(mesh, P()),
+                                    m=mv_shard, v=mv_shard)
+            batch = input_specs(arch, shape_name, cfg)
+            b_shard = batch_pspecs(batch, rules, mesh)
+
+            accum = cfg_accum(cfg)
+
+            def train_step(params, opt_state, batch):
+                if accum <= 1:
+                    loss, grads = jax.value_and_grad(
+                        lambda p: loss_fn(p, batch, cfg))(params)
+                else:
+                    # gradient accumulation: activations live for one
+                    # microbatch at a time (temp memory / accum); grad
+                    # buffer is model-sharded fp32 (~1 GB/dev for 8B)
+                    loss, grads = _accumulated_grads(params, batch, cfg,
+                                                     accum)
+                params, opt_state, info = adamw_update(
+                    params, grads, opt_state, ocfg)
+                return params, opt_state, {"loss": loss, **info}
+
+            rep = NamedSharding(mesh, P())
+            fn = jax.jit(train_step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard,
+                                        {"loss": rep, "gnorm": rep,
+                                         "lr": rep}),
+                         donate_argnums=(0, 1))
+            return fn, (p_shape, o_shape, batch), mesh, rules, cfg
+
+    if kind == "prefill":
+        rules = rules_override or arch_rules(arch, cfg, multi_pod=multi_pod)
+        rules.setdefault("cache_seq", "model")
+        with use_rules(rules, mesh):
+            p_shape = jax.eval_shape(lambda k: init_model(cfg, k), KEY)
+            p_shard = boxed_shardings(p_shape, rules, mesh)
+            batch = input_specs(arch, shape_name, cfg)
+            b_shard = batch_pspecs(batch, rules, mesh)
+
+            def prefill_step(params, batch):
+                return serve_decode.prefill(params, batch, cfg, max_seq=seq)
+
+            fn = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+            return fn, (p_shape, batch), mesh, rules, cfg
+
+    # decode
+    rules = rules_override or decode_rules(arch, cfg, multi_pod=multi_pod,
+                                           batch=gb)
+    rules.setdefault("cache_seq", "model")
+    with use_rules(rules, mesh):
+        p_shape = jax.eval_shape(lambda k: init_model(cfg, k), KEY)
+        p_shard = boxed_shardings(p_shape, rules, mesh)
+        state_shape = jax.eval_shape(
+            lambda: serve_decode.init_decode_state(cfg, gb, seq))
+        s_shard = decode_state_shardings(state_shape, cfg, rules, mesh)
+        tok = jax.ShapeDtypeStruct((gb, 1), jnp.int32)
+        tok_shard = NamedSharding(mesh, spec_for(("batch", None), rules))
+
+        def serve_step(params, state, tokens):
+            return serve_decode.decode_step(params, state, tokens, cfg)
+
+        fn = jax.jit(serve_step,
+                     in_shardings=(p_shard, s_shard, tok_shard),
+                     out_shardings=(NamedSharding(mesh, spec_for(
+                         ("batch", None, "vocab"), rules)), s_shard),
+                     donate_argnums=(1,))
+        return fn, (p_shape, state_shape, tok), mesh, rules, cfg
+
+
+# ---------------------------------------------------------------------------
+# cell runner: phase A (unrolled lowering) + phase B (compile u1)
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             flops_phase: bool = True,
+             cfg_override: Optional[ModelConfig] = None,
+             rules_override: Optional[Dict] = None) -> Dict:
+    seq, gb, kind = SHAPES[shape_name]
+    rec: Dict = {"arch": arch, "shape": shape_name, "kind": kind,
+                 "multi_pod": multi_pod, "chips": 512 if multi_pod else 256,
+                 "seq": seq, "global_batch": gb}
+    base = cfg_override or get_config(arch)
+    rec["n_params"] = base.n_params()
+    rec["n_active_params"] = base.n_active_params()
+
+    # Phase A: global FLOPs/bytes via unrolled lowering (single-pod only).
+    # NOTE: lowered WITHOUT the mesh context -- XLA cost analysis does not
+    # descend into shard_map call bodies, so the mathematical step must
+    # take the dense code paths (same arithmetic, fully visible).
+    if flops_phase and not multi_pod:
+        t0 = time.perf_counter()
+        fn, args, mesh, rules, cfg = build_cell(
+            arch, shape_name, multi_pod=multi_pod, unroll=True,
+            cfg_override=cfg_override, rules_override=rules_override)
+        with use_rules(rules, None), mesh:
+            low = fn.lower(*args)
+            ca = low.cost_analysis()
+        rec["flops_global"] = float(ca.get("flops", -1.0))
+        rec["bytes_global_unfused"] = float(ca.get("bytes accessed", -1.0))
+        rec["t_lower_unrolled_s"] = round(time.perf_counter() - t0, 2)
+        del low, fn
+
+    # Phase B: production compile (scanned) -> memory + collectives
+    t0 = time.perf_counter()
+    fn, args, mesh, rules, cfg = build_cell(
+        arch, shape_name, multi_pod=multi_pod, unroll=False,
+        cfg_override=cfg_override, rules_override=rules_override)
+    with use_rules(rules, mesh), mesh:
+        low = fn.lower(*args)
+        rec["t_lower_s"] = round(time.perf_counter() - t0, 2)
+        t0 = time.perf_counter()
+        compiled = low.compile()
+        rec["t_compile_s"] = round(time.perf_counter() - t0, 2)
+    mem = compiled.memory_analysis()
+    rec["memory_per_device"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+    }
+    rec["collective_bytes_per_device"] = collective_bytes(compiled.as_text())
+    rec["compiled_flops_per_device_u1"] = float(
+        compiled.cost_analysis().get("flops", -1.0))
+    print(json.dumps(rec))
+    return rec
+
+
+def fix_flops(out_dir: str) -> None:
+    """Recompute phase A (flops/bytes) for every existing single-pod
+    record in out_dir (used after a phase-A methodology change)."""
+    import glob
+    for path in sorted(glob.glob(os.path.join(out_dir, "*__sp.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        fn, args_, mesh, rules, cfg = build_cell(
+            rec["arch"], rec["shape"], multi_pod=False, unroll=True)
+        t0 = time.perf_counter()
+        with use_rules(rules, None), mesh:
+            ca = fn.lower(*args_).cost_analysis()
+        rec["flops_global"] = float(ca.get("flops", -1.0))
+        rec["bytes_global_unfused"] = float(ca.get("bytes accessed", -1.0))
+        rec["t_lower_unrolled_s"] = round(time.perf_counter() - t0, 2)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"fixed {os.path.basename(path)} flops={rec['flops_global']:.3e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--fix-flops", action="store_true",
+                    help="recompute phase A for existing --out records")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for JSON records")
+    args = ap.parse_args()
+
+    if args.fix_flops:
+        assert args.out
+        fix_flops(args.out)
+        return
+
+    cells = []
+    if args.all:
+        # hybrid (unrolled-layer) cells compile slowest: schedule last
+        order = [a for a in ARCH_IDS if a != "recurrentgemma_2b"] + \
+            ["recurrentgemma_2b"]
+        for a in order:
+            for s in SHAPES:
+                if s == "long_500k" and a not in LONG_OK:
+                    continue
+                if not args.multi_pod_only:
+                    cells.append((a, s, False))
+                if not args.single_pod_only:
+                    cells.append((a, s, True))
+    else:
+        assert args.arch and args.shape
+        if args.shape == "long_500k" and args.arch not in LONG_OK:
+            raise SystemExit(f"{args.arch} is full-attention: long_500k "
+                             "skipped by design (DESIGN.md section 5)")
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = []
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}.json"
+        if args.out and args.skip_existing and \
+                os.path.exists(os.path.join(args.out, tag)):
+            continue
+        try:
+            rec = run_cell(arch, shape, multi_pod=mp)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, shape, mp, repr(e)))
+            continue
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            with open(os.path.join(args.out, tag), "w") as f:
+                json.dump(rec, f, indent=1)
+    if failures:
+        print("FAILURES:", json.dumps(failures, indent=1))
+        raise SystemExit(1)
+    print("ALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Loop-aware collective accounting from post-SPMD HLO text.
+
+XLA's cost analysis counts while-loop bodies ONCE (trip counts are opaque
+to it), so collective bytes inside the layer scans would be undercounted
+by n_layers.  This parser:
+
+  1. splits the HLO text into computations,
+  2. finds every ``while`` op and its body/condition computations,
+  3. recovers each loop's trip count from the integer constant in its
+     condition computation,
+  4. sums collective result-shape bytes per computation and multiplies
+     body sums by their trip counts.
+
+Result-shape accounting: all-gather counts its (large) gathered output,
+reduce-scatter its scattered output, all-reduce the full buffer -- a
+consistent per-op proxy for link traffic.  ``*-done`` ops are skipped to
+avoid double-counting async pairs.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(")
+_WHILE = re.compile(r"while\(.*?condition=(%[\w.\-]+),\s*body=(%[\w.\-]+)")
+_COLL_LINE = re.compile(
+    r"=\s*\(?([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_CONST = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_HEADER.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def collective_bytes(text: str, default_trip: int = 1) -> Dict[str, float]:
+    """Per-device collective bytes by type, loop-trip-count corrected."""
+    comps = _split_computations(text)
+
+    # while structure: body -> trip count (from its condition computation)
+    body_trip: Dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE.search(line)
+            if not m:
+                continue
+            cond, body = m.group(1), m.group(2)
+            trip = default_trip
+            consts = [int(c) for c in _CONST.findall(
+                "\n".join(comps.get(cond, [])))]
+            consts = [c for c in consts if 1 <= c <= 100000]
+            if consts:
+                trip = max(consts)
+            body_trip[body] = max(trip, body_trip.get(body, 1))
+
+    out = {k: 0.0 for k in COLLECTIVES}
+    for name, lines in comps.items():
+        mult = body_trip.get(name, 1)
+        for line in lines:
+            if "-done(" in line:
+                continue
+            m = _COLL_LINE.search(line)
+            if not m:
+                continue
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            if dtype not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            out[kind] += n * _DTYPE_BYTES[dtype] * mult
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    out["n_while_loops"] = len(body_trip)
+    return out

@@ -1,0 +1,81 @@
+"""Production mesh definitions + per-arch sharding rules.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+MODEL_AXIS_SIZE = 16
+
+
+def arch_rules(arch: str, cfg, *, multi_pod: bool = False) -> Dict:
+    """Logical-axis -> mesh-axis rules per architecture.
+
+    Key decisions (DESIGN.md section 6):
+      * batch over (pod,) data
+      * attention heads / mlp hidden / vocab over model (TP); archs whose
+        head count does not divide the model axis (recurrentgemma: 10H)
+        shard head_dim instead; archs whose vocab does not divide it
+        (whisper 51865, mamba2 50280) replicate the embedding/head
+      * MoE: experts over model when n_experts % 16 == 0 (true EP,
+        phi3.5-16e), otherwise mlp over model (expert-TP, grok-8e)
+    """
+    b = batch_axes(multi_pod)
+    m = MODEL_AXIS_SIZE
+    rules = {
+        "batch": b,
+        "seq": None,
+        "embed": None,
+        "heads": "model" if cfg.n_heads % m == 0 else None,
+        "kv_heads": None,
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model" if cfg.vocab % m == 0 else None,
+        "layers": None,
+        "expert_router": None,
+    }
+    if cfg.n_heads % m != 0 and cfg.hd % m == 0:
+        rules["head_dim"] = "model"   # e.g. recurrentgemma 10H x hd256
+    if cfg.n_experts > 0:
+        # expert weights are stored pre-blocked for the model axis
+        # (ep_shards=16; grok's 8 experts become 16 f-slices), so the
+        # expert dim always shards cleanly
+        rules["expert"] = "model"
+        rules["mlp"] = None
+    return rules
+
+
+def decode_rules(arch: str, cfg, *, multi_pod: bool = False,
+                 batch: int = 1) -> Dict:
+    """Rules for serve steps.  The KV cache shards its *sequence* dim over
+    the model axis ("cache_seq", set by the launcher): the softmax/PV
+    reductions over the sharded seq dim then induce only small (b, h, hd)
+    all-reduces -- GSPMD's automatic flash-decode.  Small decode batches
+    cannot shard over data=16: fall back to replicated batch (long_500k
+    b=1)."""
+    r = arch_rules(arch, cfg, multi_pod=multi_pod)
+    world_b = 16 * (2 if multi_pod else 1)
+    if batch % world_b != 0:
+        r["batch"] = None
+    # cache_seq takes the model axis; head_dim must not also claim it
+    # (recurrentgemma's train rules shard head_dim)
+    if r.get("head_dim") == "model":
+        r["head_dim"] = None
+    return r

@@ -1,0 +1,139 @@
+"""Roofline analysis from dry-run records (EXPERIMENTS.md section Roofline).
+
+Hardware model (TPU v5e-class target, per assignment):
+    peak bf16 compute   197 TFLOP/s per chip
+    HBM bandwidth       819 GB/s per chip
+    ICI link bandwidth  ~50 GB/s per link
+
+Three terms per (arch x shape), all in seconds per step:
+
+    compute term     = HLO_FLOPs / (chips * peak)
+    memory term      = HLO_bytes / (chips * HBM_bw)
+    collective term  = collective_bytes_per_device / link_bw
+
+HLO_FLOPs/bytes come from the unrolled lowering's cost analysis (global,
+divided by chips); collective bytes are per-device already (post-SPMD HLO,
+loop-trip corrected).  ``bytes accessed`` on an unoptimized module counts
+every producer/consumer pair (no fusion), so the memory term is reported
+twice: the raw upper bound and a fusion-corrected estimate (x ~0.2, the
+typical TPU fusion factor for transformer blocks) -- plus an analytic
+lower bound (parameter + activation traffic) used for bottleneck calls.
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with N = active params;
+the ratio MODEL_FLOPS / HLO_FLOPs shows how much compiled compute is
+"useful" (catches remat/recompute waste).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+FUSION_FACTOR = 0.2          # unfused->fused bytes estimate
+
+
+def model_flops(rec: Dict) -> float:
+    """Useful FLOPs per step for the whole job."""
+    n = rec["n_active_params"]
+    if rec["kind"] == "train":
+        tokens = rec["seq"] * rec["global_batch"]
+        return 6.0 * n * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["seq"] * rec["global_batch"]
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * rec["global_batch"]
+
+
+def analytic_memory_bytes(rec: Dict) -> float:
+    """Per-device HBM traffic lower bound: every resident byte touched
+    once (params+opt+cache read, grads/cache written)."""
+    m = rec["memory_per_device"]
+    args = m.get("argument_bytes") or 0
+    outs = m.get("output_bytes") or 0
+    return float(args + outs)
+
+
+def roofline_row(rec: Dict) -> Dict:
+    chips = rec["chips"]
+    flops_dev = rec.get("flops_global", 0.0) / chips
+    bytes_dev_unfused = rec.get("bytes_global_unfused", 0.0) / chips
+    coll = rec["collective_bytes_per_device"]["total"]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_mem_raw = bytes_dev_unfused / HBM_BW
+    t_mem_fused = t_mem_raw * FUSION_FACTOR
+    t_mem_floor = analytic_memory_bytes(rec) / HBM_BW
+    t_mem = max(t_mem_fused, t_mem_floor)
+    t_coll = coll / LINK_BW
+
+    mf = model_flops(rec)
+    useful_ratio = mf / max(rec.get("flops_global", 0.0), 1.0)
+    terms = {"compute": t_compute, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mfu = (mf / chips / PEAK_FLOPS) / step_time if step_time > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "kind": rec["kind"],
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_mem,
+        "t_memory_raw_unfused_s": t_mem_raw,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "hlo_flops_global": rec.get("flops_global"),
+        "useful_flop_ratio": useful_ratio,
+        "roofline_fraction": mfu,   # MODEL_FLOPS-based MFU at roofline step
+        "mem_per_dev_gb": (rec["memory_per_device"].get("argument_bytes") or 0)
+        / 1e9,
+        "temp_per_dev_gb": (rec["memory_per_device"].get("temp_bytes") or 0)
+        / 1e9,
+    }
+
+
+def load_records(dirpath: str, multi_pod: Optional[bool] = False
+                 ) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if multi_pod is not None and r.get("multi_pod") != multi_pod:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'bound':>6s} {'useful':>7s} {'RL-frac':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['t_compute_s']:9.3f} "
+            f"{r['t_memory_s']:9.3f} {r['t_collective_s']:9.3f} "
+            f"{r['bottleneck'][:6]:>6s} {r['useful_flop_ratio']:7.2f} "
+            f"{r['roofline_fraction']:8.3f}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = [roofline_row(r) for r in load_records(args.dir)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    if args.json:
+        print(json.dumps(rows, indent=1))
+    else:
+        print(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,435 @@
+"""Shared model layers: norms, RoPE/M-RoPE, attention, MLPs, embeddings.
+
+Pure-functional: ``init_*`` build boxed parameter dicts (value + logical
+sharding axes), ``*_apply`` are the forward functions.  All matmuls
+accumulate in fp32 (``preferred_element_type``); norms/softmax run fp32.
+
+Attention comes in three execution strategies:
+  * chunked      lax.scan over KV chunks with online softmax -- O(s*chunk)
+                 memory, compiles everywhere; the default for train/prefill.
+  * blocked-causal  python loop over Q chunks, each attending only to its
+                 causal KV prefix (static shapes per chunk) -- saves ~45%
+                 of attention FLOPs at 4k (beyond-paper perf knob).
+  * pallas       the flash kernel (TPU fast path; interpret-validated).
+Decode attention reads a KV cache with the contraction over head_dim
+sharded (GSPMD-friendly); see repro/serve for the cache layout.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import (Boxed, box, get_mesh, get_rules, logical)
+from ..kernels.ops import flash_attention_op
+from .config import ModelConfig
+
+F32 = jnp.float32
+
+
+def _tp_ctx(cfg: ModelConfig, axis_name: str):
+    """(mesh, rules) when shard_map tensor parallelism is active for the
+    given logical axis, else (None, None).
+
+    Why shard_map here: the GSPMD einsum places the tensor-parallel
+    all-reduce on the f32 partial product (before the bf16 convert),
+    doubling wire bytes.  The explicit form accumulates locally in f32,
+    converts, then psums bf16 -- Megatron semantics.  Measured on llama3
+    train_4k: all-reduce bytes 208 GB -> ~half (EXPERIMENTS.md Perf)."""
+    if not cfg.tp_shardmap:
+        return None, None
+    mesh, rules = get_mesh(), get_rules()
+    if mesh is None or rules is None or rules.get(axis_name) is None:
+        return None, None
+    return mesh, rules
+
+
+def _init_dense(key, shape, axes, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    w = jax.random.normal(key, shape, F32) * scale
+    return box(w.astype(dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Boxed:
+    return box(jnp.ones((d,), dtype), ("embed",))
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=F32) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (b, h, s, d), pos: (b, s) -> rotated x (rotate-half convention)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (d/2,)
+    ang = pos[:, None, :, None].astype(F32) * freqs     # (b, 1, s, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, pos3: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Multimodal RoPE: pos3 (3, b, s) = (t, h, w) ids; the rotary half-dim
+    is split into sections, each rotated with its own position stream."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)                        # (half,)
+    # build per-frequency position selector (static at trace time)
+    import numpy as _np
+    sec_id = jnp.asarray(_np.repeat(_np.arange(3), _np.asarray(sections)))
+    # pos per (b, s, half)
+    pos_sel = jnp.take(pos3.astype(F32), sec_id, axis=0)        # (half, b, s)
+    ang = jnp.transpose(pos_sel, (1, 2, 0))[:, None] * freqs    # (b,1,s,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> Dict[str, Boxed]:
+    hd, d = cfg.hd, cfg.d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": _init_dense(kq, (d, cfg.n_heads, hd), ("embed", "heads", "head_dim"), cfg.p_dtype),
+        "wk": _init_dense(kk, (d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"), cfg.p_dtype),
+        "wv": _init_dense(kv, (d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"), cfg.p_dtype),
+        "wo": _init_dense(ko, (cfg.n_heads, hd, d), ("heads", "head_dim", "embed"), cfg.p_dtype),
+    }
+
+
+def _chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
+                       chunk: int, softcap: Optional[float] = None):
+    """lax.scan over KV chunks, online softmax.  q: (b, h, sq, d);
+    k/v: (b, h, skv, d) (cross-attention may have skv != sq)."""
+    b, h, s, d = q.shape
+    skv = k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    nc = max(skv // chunk, 1)
+    chunk = skv // nc
+    qf = q.astype(F32) * scale
+    kc = k.astype(F32).reshape(b, h, nc, chunk, d)
+    vc = v.astype(F32).reshape(b, h, nc, chunk, d)
+    rows = jnp.arange(s)
+
+    # python loop over KV chunks (trace-time unrolled): identical math to a
+    # lax.scan but XLA cost analysis then counts every chunk -- required
+    # for honest roofline FLOPs (while bodies are counted once).
+    acc = jnp.zeros((b, h, s, d), F32)
+    m = jnp.full((b, h, s, 1), -1e30, F32)
+    l = jnp.zeros((b, h, s, 1), F32)
+    for ci in range(nc):
+        kci, vci = kc[:, :, ci], vc[:, :, ci]
+        cols = ci * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bhsd,bhcd->bhsc", qf, kci,
+                            preferred_element_type=F32)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        mask = jnp.ones((s, chunk), bool)
+        if causal:
+            mask &= cols[None, :] <= rows[:, None]
+        if window is not None:
+            mask &= cols[None, :] > rows[:, None] - window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhsc,bhcd->bhsd", p, vci,
+                                       preferred_element_type=F32)
+        m = m_new
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def _blocked_causal_attention(q, k, v, *, window: Optional[int], chunk: int,
+                              softcap: Optional[float] = None):
+    """Python loop over Q chunks; chunk i attends keys [lo:(i+1)*chunk]
+    with static shapes -> XLA compiles only the causal band (~half the
+    FLOPs of the full rectangle).  Beyond-paper perf path."""
+    b, h, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    nc = max(s // chunk, 1)
+    chunk = s // nc
+    outs = []
+    for i in range(nc):
+        qi = q[:, :, i * chunk:(i + 1) * chunk].astype(F32) * scale
+        hi = (i + 1) * chunk
+        lo = 0
+        if window is not None:
+            lo = max(0, (i * chunk - window) // chunk * chunk)
+        ki = k[:, :, lo:hi].astype(F32)
+        vi = v[:, :, lo:hi].astype(F32)
+        logits = jnp.einsum("bhsd,bhcd->bhsc", qi, ki,
+                            preferred_element_type=F32)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        rows = i * chunk + jnp.arange(chunk)
+        cols = lo + jnp.arange(hi - lo)
+        mask = cols[None, :] <= rows[:, None]
+        if window is not None:
+            mask &= cols[None, :] > rows[:, None] - window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        outs.append(jnp.einsum("bhsc,bhcd->bhsd", p, vi,
+                               preferred_element_type=F32))
+    return jnp.concatenate(outs, axis=2).astype(q.dtype)
+
+
+def attention_apply(params, x: jax.Array, cfg: ModelConfig, *,
+                    pos: jax.Array, causal: bool = True,
+                    pos3: Optional[jax.Array] = None,
+                    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    return_kv: bool = False, use_rope: bool = True):
+    """Full-sequence attention (train / prefill).  x: (b, s, d_model).
+
+    return_kv=True additionally returns the rope'd, *unexpanded* (hkv)
+    K/V for cache seeding at prefill.  use_rope=False for absolute-
+    position models (whisper)."""
+    b, s, _ = x.shape
+    group = cfg.n_heads // cfg.n_kv_heads
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].value,
+                   preferred_element_type=F32).astype(cfg.act_dtype)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"].value,
+                       preferred_element_type=F32).astype(cfg.act_dtype)
+        v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"].value,
+                       preferred_element_type=F32).astype(cfg.act_dtype)
+    else:
+        k, v = kv_override
+    q = logical(q, ("batch", "heads", "seq", "head_dim"))
+    k = logical(k, ("batch", "kv_heads", "seq", "head_dim"))
+
+    if cfg.mrope_sections is not None and pos3 is not None:
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    elif kv_override is None and use_rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    kv_cacheable = (k, v)
+
+    # GQA expand: repeat kv heads to query heads
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+
+    if cfg.use_pallas:
+        out = flash_attention_op(q, k, v, causal=causal, window=cfg.window)
+    elif causal and cfg.causal_blocked_attn:
+        out = _blocked_causal_attention(q, k, v, window=cfg.window,
+                                        chunk=cfg.attn_chunk,
+                                        softcap=cfg.attn_logit_softcap)
+    else:
+        out = _chunked_attention(q, k, v, causal=causal, window=cfg.window,
+                                 chunk=cfg.attn_chunk,
+                                 softcap=cfg.attn_logit_softcap)
+    out = logical(out, ("batch", "heads", "seq", "head_dim"))
+    mesh, rules = _tp_ctx(cfg, "heads")
+    if mesh is not None:
+        ax = rules["heads"]
+        bspec = rules.get("batch")
+        from jax.sharding import PartitionSpec as _P
+
+        def _local_out(o, w):
+            yl = jnp.einsum("bhsk,hkd->bsd", o, w,
+                            preferred_element_type=F32)
+            return jax.lax.psum(yl.astype(cfg.act_dtype), ax)
+
+        y = jax.shard_map(
+            _local_out, mesh=mesh,
+            in_specs=(_P(bspec, ax, None, None), _P(ax, None, None)),
+            out_specs=_P(bspec, None, None))(out, params["wo"].value)
+    else:
+        y = jnp.einsum("bhsk,hkd->bsd", out, params["wo"].value,
+                       preferred_element_type=F32).astype(cfg.act_dtype)
+    y = logical(y, ("batch", "seq", "embed"))
+    if return_kv:
+        return y, kv_cacheable
+    return y
+
+
+def attention_decode(params, x: jax.Array, cfg: ModelConfig, *,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     stored_pos: jax.Array, pos: jax.Array,
+                     use_rope: bool = True
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode against a position-tracked cache.
+
+    x: (b, 1, d); cache: (b, hkv, S, hd); stored_pos: (b, S) the absolute
+    position each slot holds (-1 = empty); pos: (b,) current position.
+    The cache may be a ring buffer (S = window for SWA long-context): the
+    validity mask comes from stored_pos, not slot index, so both layouts
+    share this code.  The *new* K/V entry is folded into the attention
+    here (the caller writes it to the cache afterwards).
+    Returns (y, new_k_entry, new_v_entry) with entries (b, hkv, 1, hd).
+    """
+    b = x.shape[0]
+    group = cfg.n_heads // cfg.n_kv_heads
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].value,
+                   preferred_element_type=F32).astype(cfg.act_dtype)
+    k_new = jnp.einsum("bsd,dhk->bhsk", x, params["wk"].value,
+                       preferred_element_type=F32).astype(cfg.act_dtype)
+    v_new = jnp.einsum("bsd,dhk->bhsk", x, params["wv"].value,
+                       preferred_element_type=F32).astype(cfg.act_dtype)
+    if use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    scale = 1.0 / math.sqrt(cfg.hd)
+    qg = q.reshape(b, cfg.n_kv_heads, group, cfg.hd)
+    logits = jnp.einsum("bgqk,bgsk->bgqs", qg.astype(F32),
+                        cache_k.astype(F32),
+                        preferred_element_type=F32) * scale
+    if cfg.attn_logit_softcap:
+        logits = cfg.attn_logit_softcap * jnp.tanh(
+            logits / cfg.attn_logit_softcap)
+    valid = (stored_pos >= 0) & (stored_pos < pos[:, None])
+    if cfg.window is not None:
+        valid &= stored_pos > (pos[:, None] - cfg.window)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    # fold the new token (self) in separately -- always visible
+    self_logit = jnp.einsum("bgqk,bgsk->bgqs", qg.astype(F32),
+                            k_new.astype(F32),
+                            preferred_element_type=F32) * scale
+    if cfg.attn_logit_softcap:
+        self_logit = cfg.attn_logit_softcap * jnp.tanh(
+            self_logit / cfg.attn_logit_softcap)
+    # online-softmax combination of the (seq-sharded) cache logits with
+    # the self logit.  NOTE: a concat([logits, self_logit]) here would
+    # force an all-gather of the full (b, h, S) logits when the cache is
+    # sequence-sharded (GSPMD cannot concat across a sharded dim) -- that
+    # was measured at 35 GB/step for llama3 decode_32k; the reduction
+    # form below keeps every collective at (b, h, 1) / (b, h, hd).
+    m_cache = jnp.max(logits, axis=-1, keepdims=True)      # (b,g,q,1)
+    m = jnp.maximum(m_cache, self_logit)
+    p_cache = jnp.exp(logits - m)
+    p_self = jnp.exp(self_logit - m)                        # (b,g,q,1)
+    l = jnp.sum(p_cache, axis=-1, keepdims=True) + p_self
+    out = jnp.einsum("bgqs,bgsk->bgqk", p_cache, cache_v.astype(F32),
+                     preferred_element_type=F32)
+    out = (out + p_self * v_new.astype(F32)) / jnp.maximum(l, 1e-30)
+    out = out.reshape(b, cfg.n_heads, 1, cfg.hd).astype(cfg.act_dtype)
+    y = jnp.einsum("bhsk,hkd->bsd", out, params["wo"].value,
+                   preferred_element_type=F32).astype(cfg.act_dtype)
+    return y, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / plain)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Boxed]:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": _init_dense(k1, (d, d_ff), ("embed", "mlp"), cfg.p_dtype),
+        "wo": _init_dense(k3, (d_ff, d), ("mlp", "embed"), cfg.p_dtype),
+    }
+    if cfg.mlp_act in ("silu", "gelu"):
+        p["wg"] = _init_dense(k2, (d, d_ff), ("embed", "mlp"), cfg.p_dtype)
+    return p
+
+
+def mlp_apply(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].value,
+                   preferred_element_type=F32)
+    if "wg" in params:
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].value,
+                       preferred_element_type=F32)
+        act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = logical(h.astype(cfg.act_dtype), ("batch", "seq", "mlp"))
+    mesh, rules = _tp_ctx(cfg, "mlp")
+    if mesh is not None:
+        ax = rules["mlp"]
+        bspec = rules.get("batch")
+        from jax.sharding import PartitionSpec as _P
+
+        def _local_down(hl, w):
+            yl = jnp.einsum("bsf,fd->bsd", hl, w,
+                            preferred_element_type=F32)
+            return jax.lax.psum(yl.astype(cfg.act_dtype), ax)
+
+        y = jax.shard_map(
+            _local_down, mesh=mesh,
+            in_specs=(_P(bspec, None, ax), _P(ax, None)),
+            out_specs=_P(bspec, None, None))(h, params["wo"].value)
+    else:
+        y = jnp.einsum("bsf,fd->bsd", h, params["wo"].value,
+                       preferred_element_type=F32).astype(cfg.act_dtype)
+    return logical(y, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig) -> Dict[str, Boxed]:
+    k1, k2 = jax.random.split(key)
+    return {
+        "tok": _init_dense(k1, (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                           cfg.p_dtype, scale=0.02),
+        "head": _init_dense(k2, (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                            cfg.p_dtype),
+    }
+
+
+def embed_tokens(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["tok"].value[tokens]
+    return logical(x.astype(cfg.act_dtype), ("batch", "seq", "embed"))
+
+
+def lm_logits(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].value,
+                        preferred_element_type=F32)
+    return logical(logits, ("batch", "seq", "vocab"))
+
+
+def chunked_cross_entropy(head: Boxed, x: jax.Array, labels: jax.Array,
+                          cfg: ModelConfig) -> jax.Array:
+    """Sequence-chunked CE so (b, s, vocab) never fully materializes."""
+    b, s, d = x.shape
+    nc = max(s // cfg.loss_chunk, 1)
+    xc = x.reshape(b, nc, s // nc, d)
+    lc = labels.reshape(b, nc, s // nc)
+
+    def step(tot, inp):
+        xi, li = inp
+        logits = jnp.einsum("bsd,dv->bsv", xi, head.value,
+                            preferred_element_type=F32)
+        logits = logical(logits, ("batch", "seq", "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    (total, _) = jax.lax.scan(step, jnp.zeros((), F32),
+                              (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+    return total / (b * s)

@@ -1,0 +1,50 @@
+"""Model registry: family -> init / loss / serve entry points."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import transformer as T
+
+
+def init_model(cfg: ModelConfig, key: jax.Array) -> Dict:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return T.init_decoder(key, cfg)
+    if cfg.family == "encdec":
+        return T.init_encdec(key, cfg)
+    if cfg.family == "hybrid":
+        return T.init_hybrid(key, cfg)
+    if cfg.family == "ssm":
+        return T.init_ssm_lm(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def loss_fn(params, batch: Dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return T.decoder_loss(params, batch, cfg)
+    if cfg.family == "encdec":
+        return T.encdec_loss(params, batch, cfg)
+    if cfg.family == "hybrid":
+        return T.hybrid_loss(params, batch, cfg)
+    if cfg.family == "ssm":
+        return T.ssm_loss(params, batch, cfg)
+    raise ValueError(cfg.family)
+
+
+def hidden_fn(params, batch: Dict, cfg: ModelConfig) -> jax.Array:
+    """Final hidden states (prefill path shares this)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, _ = T.decoder_hidden(params, batch["tokens"], cfg,
+                                pos3=batch.get("pos3"),
+                                patch_embeds=batch.get("patch_embeds"))
+        return x
+    if cfg.family == "encdec":
+        return T.encdec_hidden(params, batch["frames"], batch["tokens"], cfg)
+    if cfg.family == "hybrid":
+        return T.hybrid_hidden(params, batch["tokens"], cfg)
+    if cfg.family == "ssm":
+        return T.ssm_hidden(params, batch["tokens"], cfg)
+    raise ValueError(cfg.family)

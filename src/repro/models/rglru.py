@@ -1,0 +1,134 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_r x_t + b_r)           recurrence gate
+    i_t = sigmoid(W_i x_t + b_i)           input gate
+    a_t = a ^ (c * r_t),  a = sigmoid(Lambda)   (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+A diagonal linear recurrence -> jax.lax.associative_scan over time (log-
+depth, TPU-friendly), plus O(1)-state decode.  The recurrent block wraps
+the RG-LRU with in/out projections and a short depthwise causal conv, per
+the Griffin block.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import Boxed, box, logical
+from .config import ModelConfig
+
+F32 = jnp.float32
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array        # (b, w) fp32 recurrent state
+    conv: jax.Array     # (b, w, k-1)
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> Dict[str, Boxed]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "in_x": box((jax.random.normal(k1, (d, w), F32) / math.sqrt(d)
+                     ).astype(cfg.p_dtype), ("embed", "mlp")),
+        "in_gate": box((jax.random.normal(k2, (d, w), F32) / math.sqrt(d)
+                        ).astype(cfg.p_dtype), ("embed", "mlp")),
+        "conv_w": box((jax.random.normal(k3, (w, 4), F32) * 0.1
+                       ).astype(cfg.p_dtype), ("mlp", None)),
+        "conv_b": box(jnp.zeros((w,), cfg.p_dtype), ("mlp",)),
+        "w_r": box((jax.random.normal(k4, (w, w), F32) / math.sqrt(w)
+                    ).astype(cfg.p_dtype), ("mlp", None)),
+        "b_r": box(jnp.zeros((w,), F32), (None,)),
+        "w_i": box((jax.random.normal(k5, (w, w), F32) / math.sqrt(w)
+                    ).astype(cfg.p_dtype), ("mlp", None)),
+        "b_i": box(jnp.zeros((w,), F32), (None,)),
+        # Lambda init so a ~ U(0.9, 0.999)^ish (standard Griffin init)
+        "lam": box(jnp.log(jnp.linspace(0.9, 0.999, w) /
+                           (1 - jnp.linspace(0.9, 0.999, w))).astype(F32),
+                   (None,)),
+        "out": box((jax.random.normal(jax.random.fold_in(key, 9), (w, d), F32)
+                    / math.sqrt(w)).astype(cfg.p_dtype), ("mlp", "embed")),
+    }
+
+
+def _rglru_scan(x: jax.Array, a: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative_scan.  x=b_t: (b, s, w)."""
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_out, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h
+
+
+def _gates(params, xc: jax.Array):
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xc.astype(F32),
+                                  params["w_r"].value.astype(F32))
+                       + params["b_r"].value)
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xc.astype(F32),
+                                  params["w_i"].value.astype(F32))
+                       + params["b_i"].value)
+    log_a_base = -jax.nn.softplus(-params["lam"].value)   # log sigmoid(lam)
+    log_a = _C * r * log_a_base
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * (i * xc.astype(F32))
+
+
+def rglru_block_apply(params, x: jax.Array, cfg: ModelConfig, *,
+                      return_cache: bool = False):
+    """Full-sequence recurrent block.  x: (b, s, d)."""
+    b, s, _ = x.shape
+    xb = jnp.einsum("bsd,dw->bsw", x, params["in_x"].value,
+                    preferred_element_type=F32)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["in_gate"].value,
+                                  preferred_element_type=F32))
+    # depthwise causal conv width 4
+    w = params["conv_w"].value.astype(F32)
+    xp = jnp.pad(xb, ((0, 0), (3, 0), (0, 0)))
+    xc = sum(xp[:, j:j + s] * w[:, j] for j in range(4)) \
+        + params["conv_b"].value.astype(F32)
+    a, bterm = _gates(params, xc)
+    h = _rglru_scan(bterm, a)                        # (b, s, w)
+    y = (h * gate).astype(cfg.act_dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"].value,
+                     preferred_element_type=F32).astype(cfg.act_dtype)
+    out = logical(out, ("batch", "seq", "embed"))
+    if return_cache:
+        conv_tail = jnp.moveaxis(xb[:, s - 3:, :], 1, 2).astype(cfg.act_dtype)
+        return out, RGLRUCache(h[:, -1], conv_tail)
+    return out
+
+
+def rglru_block_decode(params, x: jax.Array, cfg: ModelConfig,
+                       cache: RGLRUCache) -> Tuple[jax.Array, RGLRUCache]:
+    """Single-token step.  x: (b, 1, d)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, params["in_x"].value,
+                    preferred_element_type=F32)[:, 0]
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["in_gate"].value,
+                                  preferred_element_type=F32))[:, 0]
+    conv_in = jnp.concatenate([cache.conv, xb[:, :, None]], axis=2)
+    w = params["conv_w"].value.astype(F32)
+    xc = jnp.einsum("bwk,wk->bw", conv_in.astype(F32), w) \
+        + params["conv_b"].value.astype(F32)
+    a, bterm = _gates(params, xc)
+    h = a * cache.h + bterm
+    y = (h * gate).astype(cfg.act_dtype)
+    out = jnp.einsum("bw,wd->bd", y, params["out"].value,
+                     preferred_element_type=F32).astype(cfg.act_dtype)
+    return out[:, None], RGLRUCache(h, conv_in[:, :, 1:])
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> RGLRUCache:
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUCache(h=jnp.zeros((batch, w), F32),
+                      conv=jnp.zeros((batch, w, 3), cfg.act_dtype))

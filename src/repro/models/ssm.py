@@ -1,0 +1,232 @@
+"""Mamba-2 (SSD, state-space duality) block -- arXiv:2405.21060.
+
+Chunked SSD algorithm: the sequence splits into chunks of length L; the
+intra-chunk part is a masked quadratic form (attention-like, runs on the
+MXU), the inter-chunk part is a tiny recurrence over per-chunk states
+(h, dstate, p).  This is the TPU-native expression of the paper's
+"attention-free" family and the substrate for the long_500k shape
+(state is O(1) in sequence length).
+
+ngroups = 1 (B/C shared across heads), depthwise causal conv of width 4
+on (x, B, C) as in the reference implementation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import Boxed, box, logical
+from .config import ModelConfig
+
+F32 = jnp.float32
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array      # (b, h, dstate, p) fp32
+    conv: jax.Array       # (b, conv_dim, kconv-1) last inputs
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Dict[str, Boxed]:
+    d = cfg.d_model
+    d_in = cfg.ssm_inner
+    h = cfg.ssm_heads
+    ds = cfg.ssm_state
+    conv_dim = d_in + 2 * ds
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * ds + h
+    return {
+        "in_proj": box(
+            (jax.random.normal(k1, (d, proj_out), F32) / math.sqrt(d)
+             ).astype(cfg.p_dtype), ("embed", "mlp")),
+        "conv_w": box(
+            (jax.random.normal(k2, (conv_dim, cfg.ssm_conv), F32) * 0.1
+             ).astype(cfg.p_dtype), ("mlp", None)),
+        "conv_b": box(jnp.zeros((conv_dim,), cfg.p_dtype), ("mlp",)),
+        "A_log": box(jnp.log(jnp.linspace(1.0, 16.0, h)).astype(F32), (None,)),
+        "D": box(jnp.ones((h,), F32), (None,)),
+        "dt_bias": box(jnp.zeros((h,), F32), (None,)),
+        "norm_w": box(jnp.ones((d_in,), cfg.p_dtype), ("mlp",)),
+        "out_proj": box(
+            (jax.random.normal(k4, (d_in, d), F32) / math.sqrt(d_in)
+             ).astype(cfg.p_dtype), ("mlp", "embed")),
+    }
+
+
+def _split_proj(z_xbc_dt, cfg: ModelConfig):
+    d_in, ds, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    z = z_xbc_dt[..., :d_in]
+    xbc = z_xbc_dt[..., d_in:d_in + d_in + 2 * ds]
+    dt = z_xbc_dt[..., d_in + d_in + 2 * ds:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq.  xbc: (b, s, c), w: (c, k)."""
+    b, s, c = xbc.shape
+    k = w.shape[1]
+    x = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    # stack k shifted views: sum_j w[:, j] * x[:, t - (k-1) + j]
+    out = jnp.zeros((b, s, c), F32)
+    for j in range(k):
+        out = out + x[:, j:j + s].astype(F32) * w[:, j].astype(F32)
+    return out + bias.astype(F32)
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, w: jax.Array) -> jax.Array:
+    yz = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(yz * yz, axis=-1, keepdims=True)
+    return yz * jax.lax.rsqrt(var + 1e-6) * w.astype(F32)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """segsum(x)[..., i, j] = sum_{j < l <= i} x[..., l]  (lower-tri)."""
+    L = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(x_h: jax.Array, dt: jax.Array, A: jax.Array,
+                B: jax.Array, C: jax.Array, chunk: int,
+                init_state: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  x_h: (b, s, h, p); dt: (b, s, h); A: (h,);
+    B/C: (b, s, dstate).  Returns (y (b,s,h,p), final_state (b,h,ds,p)).
+
+    Sequences are padded to a chunk multiple with dt=0 (zero contribution
+    to both output and state)."""
+    b, s_orig, h, p = x_h.shape
+    pad = (-s_orig) % chunk
+    if pad:
+        x_h = jnp.pad(x_h, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    b, s, h, p = x_h.shape
+    ds = B.shape[-1]
+    nc = s // chunk
+    L = chunk
+
+    xc = x_h.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h)
+    Bc = B.reshape(b, nc, L, ds)
+    Cc = C.reshape(b, nc, L, ds)
+    dA = dtc * A                                   # (b, nc, L, h)  (A < 0)
+
+    # intra-chunk: Y[i] = sum_{j<=i} C_i.B_j exp(seg(i,j)) dt_j x_j
+    seg = _segsum(jnp.moveaxis(dA, -1, -2))        # (b, nc, h, L, L)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bcis,bcjs->bcij", Cc, Bc,
+                    preferred_element_type=F32)    # (b, nc, L, L)
+    att = cb[:, :, None] * decay                   # (b, nc, h, L, L)
+    xdt = xc * dtc[..., None]                      # (b, nc, L, h, p)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", att, xdt,
+                         preferred_element_type=F32)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j (x) x_j
+    cum = jnp.cumsum(dA, axis=2)                   # (b, nc, L, h)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b, nc, L, h)
+    S = jnp.einsum("bcjs,bcjh,bcjhp->bchsp", Bc, dtc * decay_to_end, xc,
+                   preferred_element_type=F32)     # (b, nc, h, ds, p)
+
+    # inter-chunk recurrence over c:  S_prev' = S_prev * exp(sum dA) + S_c
+    total = jnp.exp(cum[:, :, -1, :])              # (b, nc, h)
+
+    def scan_fn(carry, inp):
+        S_c, tot_c = inp
+        new = carry * tot_c[..., None, None] + S_c
+        return new, carry                           # emit state BEFORE chunk
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, ds, p), F32)
+    S_t = jnp.moveaxis(S, 1, 0)
+    tot_t = jnp.moveaxis(total, 1, 0)
+    final, S_prev = jax.lax.scan(scan_fn, init_state, (S_t, tot_t))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)            # (b, nc, h, ds, p)
+
+    # inter-chunk output: Y_i += C_i . S_prev * exp(cum_i)
+    y_inter = jnp.einsum("bcis,bchsp,bcih->bcihp", Cc, S_prev, jnp.exp(cum),
+                         preferred_element_type=F32)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y[:, :s_orig], final
+
+
+def mamba2_apply(params, x: jax.Array, cfg: ModelConfig, *,
+                 return_cache: bool = False):
+    """Full-sequence forward.  x: (b, s, d_model).
+
+    return_cache=True also returns the SSMCache after the last token
+    (prefill seeding)."""
+    b, s, _ = x.shape
+    h, p, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    zxd = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].value,
+                     preferred_element_type=F32)
+    z, xbc_raw, dt = _split_proj(zxd, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"].value,
+                                   params["conv_b"].value))
+    x_in = xbc[..., :cfg.ssm_inner]
+    B = xbc[..., cfg.ssm_inner:cfg.ssm_inner + ds]
+    C = xbc[..., cfg.ssm_inner + ds:]
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"].value)
+    A = -jnp.exp(params["A_log"].value)            # (h,)
+    x_h = x_in.reshape(b, s, h, p)
+    x_h = logical(x_h, ("batch", "seq", "heads", None))
+    y, final = ssd_forward(x_h.astype(F32), dt, A, B.astype(F32),
+                           C.astype(F32), cfg.ssm_chunk)
+    y = y + params["D"].value[None, None, :, None] * x_h.astype(F32)
+    y = y.reshape(b, s, h * p)
+    y = _gated_rmsnorm(y, z, params["norm_w"].value).astype(cfg.act_dtype)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].value,
+                     preferred_element_type=F32).astype(cfg.act_dtype)
+    out = logical(out, ("batch", "seq", "embed"))
+    if return_cache:
+        kc = cfg.ssm_conv - 1
+        conv_tail = jnp.moveaxis(
+            xbc_raw[:, s - kc:, :], 1, 2).astype(cfg.act_dtype)  # (b, c, k-1)
+        return out, SSMCache(final, conv_tail)
+    return out
+
+
+def mamba2_decode(params, x: jax.Array, cfg: ModelConfig, cache: SSMCache
+                  ) -> Tuple[jax.Array, SSMCache]:
+    """Single-token step.  x: (b, 1, d)."""
+    b = x.shape[0]
+    h, p, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    zxd = jnp.einsum("bsd,dk->bsk", x, params["in_proj"].value,
+                     preferred_element_type=F32)
+    z, xbc, dt = _split_proj(zxd[:, 0], cfg)       # (b, ...)
+    # conv via cache window
+    conv_in = jnp.concatenate([cache.conv, xbc[:, :, None]], axis=2)
+    w = params["conv_w"].value.astype(F32)         # (c, k)
+    xbc_c = jnp.einsum("bck,ck->bc", conv_in.astype(F32), w) \
+        + params["conv_b"].value.astype(F32)
+    xbc_c = jax.nn.silu(xbc_c)
+    new_conv = conv_in[:, :, 1:]
+
+    x_in = xbc_c[..., :cfg.ssm_inner].reshape(b, h, p)
+    B = xbc_c[..., cfg.ssm_inner:cfg.ssm_inner + ds]
+    C = xbc_c[..., cfg.ssm_inner + ds:]
+    dt1 = jax.nn.softplus(dt.astype(F32) + params["dt_bias"].value)  # (b, h)
+    A = -jnp.exp(params["A_log"].value)
+    dA = jnp.exp(dt1 * A)                          # (b, h)
+    S = cache.state * dA[..., None, None] + jnp.einsum(
+        "bs,bh,bhp->bhsp", B.astype(F32), dt1, x_in.astype(F32))
+    y = jnp.einsum("bs,bhsp->bhp", C.astype(F32), S)
+    y = y + params["D"].value[None, :, None] * x_in.astype(F32)
+    y = y.reshape(b, h * p)
+    y = _gated_rmsnorm(y, z, params["norm_w"].value).astype(cfg.act_dtype)
+    out = jnp.einsum("bk,kd->bd", y, params["out_proj"].value,
+                     preferred_element_type=F32).astype(cfg.act_dtype)
+    return out[:, None], SSMCache(S, new_conv)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> SSMCache:
+    conv_dim = cfg.ssm_inner + 2 * cfg.ssm_state
+    return SSMCache(
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                         cfg.ssm_headdim), F32),
+        conv=jnp.zeros((batch, conv_dim, cfg.ssm_conv - 1), cfg.act_dtype))

@@ -1,0 +1,361 @@
+"""Model assembly: dense/MoE decoder LM, encoder-decoder, hybrid.
+
+Layer stacking uses lax.scan over vmap-stacked parameters (compile time
+independent of depth -- 80-layer qwen2-vl compiles as one block) with
+optional remat.  The hybrid (recurrentgemma) family unrolls its short
+repeating pattern instead (heterogeneous blocks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import Boxed, box, stack_axes, logical
+from .config import ModelConfig
+from .layers import (attention_apply, attention_decode, chunked_cross_entropy,
+                     embed_tokens, init_attention, init_embedding, init_mlp,
+                     init_rmsnorm, lm_logits, mlp_apply, rmsnorm)
+from .moe import init_moe, moe_apply
+from .rglru import (RGLRUCache, init_rglru_block, init_rglru_cache,
+                    rglru_block_apply, rglru_block_decode)
+from .ssm import (SSMCache, init_mamba2, init_ssm_cache, mamba2_apply,
+                  mamba2_decode)
+
+F32 = jnp.float32
+
+
+def _unroll(cfg: ModelConfig) -> int:
+    """lax.scan unroll factor: full unroll for dry-run cost accounting
+    (scan_unroll=True) so XLA counts every layer's FLOPs."""
+    return cfg.n_layers if cfg.scan_unroll else 1
+
+
+def _unroll_n(cfg: ModelConfig, n: int) -> int:
+    return n if cfg.scan_unroll else 1
+
+
+# ---------------------------------------------------------------------------
+# Decoder block (dense or MoE)
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig) -> Dict:
+    ka, km = jax.random.split(key)
+    p = {
+        "ln_attn": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "attn": init_attention(ka, cfg),
+        "ln_mlp": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+    }
+    if cfg.n_experts > 0:
+        p["moe"] = init_moe(km, cfg)
+    else:
+        p["mlp"] = init_mlp(km, cfg)
+    return p
+
+
+def block_apply(params, x, cfg: ModelConfig, *, pos, pos3=None,
+                causal=True) -> Tuple[jax.Array, jax.Array]:
+    h = rmsnorm(x, params["ln_attn"].value)
+    x = x + attention_apply(params["attn"], h, cfg, pos=pos, pos3=pos3,
+                            causal=causal)
+    h = rmsnorm(x, params["ln_mlp"].value)
+    aux = jnp.zeros((), F32)
+    if "moe" in params:
+        y, aux = moe_apply(params["moe"], h, cfg)
+    else:
+        y = mlp_apply(params["mlp"], h, cfg)
+    return x + y, aux
+
+
+def block_decode(params, x, cfg: ModelConfig, *, pos, cache_k, cache_v):
+    h = rmsnorm(x, params["ln_attn"].value)
+    y, k_new, v_new = attention_decode(params["attn"], h, cfg,
+                                       cache_k=cache_k, cache_v=cache_v,
+                                       pos=pos)
+    x = x + y
+    h = rmsnorm(x, params["ln_mlp"].value)
+    if "moe" in params:
+        y, _ = moe_apply(params["moe"], h, cfg)
+    else:
+        y = mlp_apply(params["mlp"], h, cfg)
+    return x + y, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE / VLM decoder LM
+# ---------------------------------------------------------------------------
+
+def init_decoder(key, cfg: ModelConfig) -> Dict:
+    ke, kl, kn = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    return {
+        "embed": init_embedding(ke, cfg),
+        "layers": stack_axes(stacked),
+        "ln_f": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+    }
+
+
+def decoder_hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
+                   pos3: Optional[jax.Array] = None,
+                   patch_embeds: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """tokens (b, s_text) [+ patch embeds (b, n_p, d)] -> final hidden."""
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(cfg.act_dtype), x], axis=1)
+        x = logical(x, ("batch", "seq", "embed"))
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.mrope_sections is not None and pos3 is None:
+        pos3 = jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s))
+
+    if cfg.seq_shard:
+        x = logical(x, ("batch", "seq_sp", "embed"))
+
+    def body(carry, layer_params):
+        x, aux = carry
+        x, a = block_apply(layer_params, x, cfg, pos=pos, pos3=pos3)
+        if cfg.seq_shard:
+            # sequence-parallel residual: the remat-saved carry lives
+            # seq-sharded over the model axis (16x less live memory)
+            x = logical(x, ("batch", "seq_sp", "embed"))
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), F32)),
+                               params["layers"], unroll=_unroll(cfg))
+    return rmsnorm(x, params["ln_f"].value), aux
+
+
+def decoder_loss(params, batch: Dict, cfg: ModelConfig) -> jax.Array:
+    x, aux = decoder_hidden(params, batch["tokens"], cfg,
+                            pos3=batch.get("pos3"),
+                            patch_embeds=batch.get("patch_embeds"))
+    labels = batch["labels"]
+    if batch.get("patch_embeds") is not None:
+        # vision positions carry no labels: prepend ignore index
+        n_p = batch["patch_embeds"].shape[1]
+        pad = jnp.full((labels.shape[0], n_p), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    ce = _masked_ce(params["embed"]["head"], x, labels, cfg)
+    return ce + 0.01 * aux
+
+
+def _masked_ce(head: Boxed, x, labels, cfg: ModelConfig) -> jax.Array:
+    """Sequence-chunked masked CE: the (b, s, vocab) logits never fully
+    materialize.  Python loop over chunks (trace-time unrolled) so cost
+    analysis counts every chunk's head matmul."""
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    b, s, d = x.shape
+    nc = max(s // cfg.loss_chunk, 1)
+    cs = s // nc
+    num = jnp.zeros((), F32)
+    den = jnp.zeros((), F32)
+    for ci in range(nc):
+        xi = x[:, ci * cs:(ci + 1) * cs]
+        li = safe[:, ci * cs:(ci + 1) * cs]
+        mi = mask[:, ci * cs:(ci + 1) * cs]
+        logits = jnp.einsum("bsd,dv->bsv", xi, head.value,
+                            preferred_element_type=F32)
+        logits = logical(logits, ("batch", "seq", "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        num = num + jnp.sum(jnp.where(mi, logz - gold, 0.0))
+        den = den + jnp.sum(mi)
+    return num / jnp.maximum(den, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper): stub frame embeddings -> encoder; decoder with
+# cross attention.  Sinusoidal positions (parameter-free, any length).
+# ---------------------------------------------------------------------------
+
+def _sinusoid(s: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(s, dtype=F32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=F32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((s, d), F32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+def init_enc_block(key, cfg: ModelConfig) -> Dict:
+    ka, km = jax.random.split(key)
+    return {
+        "ln_attn": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "attn": init_attention(ka, cfg),
+        "ln_mlp": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "mlp": init_mlp(km, cfg),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig) -> Dict:
+    ka, kx, km = jax.random.split(key, 3)
+    return {
+        "ln_self": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "self_attn": init_attention(ka, cfg),
+        "ln_cross": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "cross_attn": init_attention(kx, cfg),
+        "ln_mlp": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "mlp": init_mlp(km, cfg),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> Dict:
+    ke, k1, k2, kn = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k1, cfg.enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": init_embedding(ke, cfg),
+        "enc_layers": stack_axes(jax.vmap(
+            lambda k: init_enc_block(k, cfg))(enc_keys)),
+        "dec_layers": stack_axes(jax.vmap(
+            lambda k: init_dec_block(k, cfg))(dec_keys)),
+        "ln_enc": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "ln_f": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+    }
+
+
+def encoder_apply(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (b, s_enc, d) precomputed embeddings (conv frontend stub)."""
+    b, s, d = frames.shape
+    x = frames.astype(cfg.act_dtype) + _sinusoid(s, d, cfg.act_dtype)
+    x = logical(x, ("batch", "seq", "embed"))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["ln_attn"].value)
+        x = x + attention_apply(lp["attn"], h, cfg, pos=pos, causal=False,
+                                use_rope=False)
+        h = rmsnorm(x, lp["ln_mlp"].value)
+        return x + mlp_apply(lp["mlp"], h, cfg), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"],
+                        unroll=_unroll_n(cfg, cfg.enc_layers))
+    return rmsnorm(x, params["ln_enc"].value)
+
+
+def encdec_hidden(params, frames: jax.Array, tokens: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    enc = encoder_apply(params, frames, cfg)
+    b, s = tokens.shape
+    x = embed_tokens(params["embed"], tokens, cfg)
+    x = x + _sinusoid(s, cfg.d_model, cfg.act_dtype)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    # precompute cross K/V once per layer inside scan (enc is loop-invariant)
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["ln_self"].value)
+        x = x + attention_apply(lp["self_attn"], h, cfg, pos=pos, causal=True,
+                                use_rope=False)
+        h = rmsnorm(x, lp["ln_cross"].value)
+        kx = jnp.einsum("bsd,dhk->bhsk", enc, lp["cross_attn"]["wk"].value,
+                        preferred_element_type=F32).astype(cfg.act_dtype)
+        vx = jnp.einsum("bsd,dhk->bhsk", enc, lp["cross_attn"]["wv"].value,
+                        preferred_element_type=F32).astype(cfg.act_dtype)
+        x = x + attention_apply(lp["cross_attn"], h, cfg, pos=pos,
+                                causal=False, kv_override=(kx, vx))
+        h = rmsnorm(x, lp["ln_mlp"].value)
+        return x + mlp_apply(lp["mlp"], h, cfg), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"],
+                        unroll=_unroll(cfg))
+    return rmsnorm(x, params["ln_f"].value)
+
+
+def encdec_loss(params, batch: Dict, cfg: ModelConfig) -> jax.Array:
+    x = encdec_hidden(params, batch["frames"], batch["tokens"], cfg)
+    return _masked_ce(params["embed"]["head"], x, batch["labels"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (recurrentgemma): unrolled pattern of rglru/attn blocks + MLPs
+# ---------------------------------------------------------------------------
+
+def hybrid_layer_kinds(cfg: ModelConfig):
+    pat = cfg.block_pattern or ("rglru", "rglru", "attn")
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+def init_hybrid(key, cfg: ModelConfig) -> Dict:
+    ke, kl = jax.random.split(key)
+    kinds = hybrid_layer_kinds(cfg)
+    keys = jax.random.split(kl, cfg.n_layers)
+    layers = []
+    for k, kind in zip(keys, kinds):
+        ka, km = jax.random.split(k)
+        lp = {"ln_mix": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+              "ln_mlp": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+              "mlp": init_mlp(km, cfg)}
+        if kind == "attn":
+            lp["attn"] = init_attention(ka, cfg)
+        else:
+            lp["rglru"] = init_rglru_block(ka, cfg)
+        layers.append(lp)
+    return {
+        "embed": init_embedding(ke, cfg),
+        "layers": layers,
+        "ln_f": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+    }
+
+
+def hybrid_hidden(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = embed_tokens(params["embed"], tokens, cfg)
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    kinds = hybrid_layer_kinds(cfg)
+    for lp, kind in zip(params["layers"], kinds):
+        h = rmsnorm(x, lp["ln_mix"].value)
+        if kind == "attn":
+            x = x + attention_apply(lp["attn"], h, cfg, pos=pos, causal=True)
+        else:
+            x = x + rglru_block_apply(lp["rglru"], h, cfg)
+        h = rmsnorm(x, lp["ln_mlp"].value)
+        x = x + mlp_apply(lp["mlp"], h, cfg)
+    return rmsnorm(x, params["ln_f"].value)
+
+
+def hybrid_loss(params, batch: Dict, cfg: ModelConfig) -> jax.Array:
+    x = hybrid_hidden(params, batch["tokens"], cfg)
+    return _masked_ce(params["embed"]["head"], x, batch["labels"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# SSM (mamba2) LM
+# ---------------------------------------------------------------------------
+
+def init_ssm_lm(key, cfg: ModelConfig) -> Dict:
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: {
+        "ln": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "mixer": init_mamba2(k, cfg)})(layer_keys)
+    return {
+        "embed": init_embedding(ke, cfg),
+        "layers": stack_axes(stacked),
+        "ln_f": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+    }
+
+
+def ssm_hidden(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["ln"].value)
+        return x + mamba2_apply(lp["mixer"], h, cfg), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"],
+                        unroll=_unroll(cfg))
+    return rmsnorm(x, params["ln_f"].value)
+
+
+def ssm_loss(params, batch: Dict, cfg: ModelConfig) -> jax.Array:
+    x = ssm_hidden(params, batch["tokens"], cfg)
+    return _masked_ce(params["embed"]["head"], x, batch["labels"], cfg)

@@ -1,0 +1,4 @@
+"""Serving: prefill/decode steps, KV caches, continuous batching + DLB."""
+from .decode import (EncDecState, HybridState, KVCache, SSMState, decode_step,
+                     init_decode_state, init_kv_cache, prefill)
+from .engine import Request, ServeEngine

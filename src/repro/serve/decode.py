@@ -1,0 +1,458 @@
+"""Prefill + single-token decode for every arch family.
+
+Cache layouts (logical sharding in brackets):
+
+* transformer KV:  k/v (L, b, hkv, S, hd) [None, batch, kv_heads, seq, head_dim]
+  with ``stored_pos`` (b, S) tracking which absolute position each slot
+  holds.  S = full context for decode_32k; S = window (ring buffer) for
+  SWA long_500k -- the position-tracked mask makes both layouts share the
+  attention code.  The contraction over head_dim is sharded over "model"
+  for the memory-bound decode matvecs (DESIGN.md section 6).
+* ssm:     stacked SSMCache (L, ...) -- O(1) state, the paper's cheapest
+  migration unit for elastic serving.
+* hybrid:  per-layer list (KV ring for local attn, RGLRU state).
+* encdec:  decoder self-KV + precomputed cross K/V.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import logical
+from ..models import ModelConfig
+from ..models import transformer as T
+from ..models.transformer import _unroll
+from ..models.layers import (attention_apply, attention_decode, embed_tokens,
+                             mlp_apply, rmsnorm)
+from ..models.moe import moe_apply
+from ..models.rglru import (RGLRUCache, init_rglru_cache, rglru_block_apply,
+                            rglru_block_decode)
+from ..models.ssm import (SSMCache, init_ssm_cache, mamba2_apply,
+                          mamba2_decode)
+
+F32 = jnp.float32
+
+
+class KVCache(NamedTuple):
+    k: jax.Array           # (L, b, hkv, S, hd)
+    v: jax.Array
+    stored_pos: jax.Array  # (b, S) absolute position per slot, -1 empty
+    pos: jax.Array         # (b,) next position
+
+
+def kv_cache_spec_axes():
+    return (None, "batch", "kv_heads", "seq", "head_dim")
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  n_layers: Optional[int] = None) -> KVCache:
+    """S = min(window, max_seq) when SWA -- ring buffer."""
+    S = max_seq if cfg.window is None else min(cfg.window, max_seq)
+    L = n_layers if n_layers is not None else cfg.n_layers
+    shape = (L, batch, cfg.n_kv_heads, S, cfg.hd)
+    return KVCache(
+        k=jnp.zeros(shape, cfg.act_dtype),
+        v=jnp.zeros(shape, cfg.act_dtype),
+        stored_pos=jnp.full((batch, S), -1, jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32))
+
+
+def _write_slot(cache: KVCache, k_new: jax.Array, v_new: jax.Array
+                ) -> KVCache:
+    """Write (L, b, hkv, 1, hd) entries at each row's current position."""
+    L, b, hkv, S, hd = cache.k.shape
+    slot = cache.pos % S                               # ring when S < ctx
+    bi = jnp.arange(b)
+    # NOTE: advanced indices (bi, slot) separated by slices -> the indexed
+    # view is (b, L, hkv, hd) with the advanced dims moved to the FRONT.
+    kn = jnp.moveaxis(k_new[:, :, :, 0, :], 0, 1)      # (b, L, hkv, hd)
+    vn = jnp.moveaxis(v_new[:, :, :, 0, :], 0, 1)
+    k = cache.k.at[:, bi, :, slot, :].set(kn)
+    v = cache.v.at[:, bi, :, slot, :].set(vn)
+    sp = cache.stored_pos.at[bi, slot].set(cache.pos)
+    return KVCache(k, v, sp, cache.pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# dense / moe / vlm
+# ---------------------------------------------------------------------------
+
+def decoder_prefill(params, tokens: jax.Array, cfg: ModelConfig, *,
+                    max_seq: int,
+                    patch_embeds: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, KVCache]:
+    """Forward over the prompt; returns (last-position logits, seeded cache)."""
+    x = embed_tokens(params["embed"], tokens, cfg)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(cfg.act_dtype), x], axis=1)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos3 = None
+    if cfg.mrope_sections is not None:
+        pos3 = jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s))
+
+    def body(carry, layer_params):
+        x = carry
+        h = rmsnorm(x, layer_params["ln_attn"].value)
+        y, (k, v) = attention_apply(layer_params["attn"], h, cfg, pos=pos,
+                                    pos3=pos3, causal=True, return_kv=True)
+        x = x + y
+        h = rmsnorm(x, layer_params["ln_mlp"].value)
+        if "moe" in layer_params:
+            y, _ = moe_apply(layer_params["moe"], h, cfg)
+        else:
+            y = mlp_apply(layer_params["mlp"], h, cfg)
+        return x + y, (k, v)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(body_fn, x, params["layers"],
+                               unroll=_unroll(cfg))
+    x = rmsnorm(x, params["ln_f"].value)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["embed"]["head"].value,
+                        preferred_element_type=F32)
+
+    cache = init_kv_cache(cfg, b, max_seq)
+    S = cache.k.shape[3]
+    if S >= s:
+        k_in = ks.astype(cfg.act_dtype)
+        v_in = vs.astype(cfg.act_dtype)
+        cache = cache._replace(
+            k=jax.lax.dynamic_update_slice(cache.k, k_in, (0, 0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(cache.v, v_in, (0, 0, 0, 0, 0)),
+            stored_pos=cache.stored_pos.at[:, :s].set(
+                jnp.broadcast_to(jnp.arange(s)[None], (b, s))),
+        )
+    else:  # SWA ring: keep the last S positions
+        k_in = ks[:, :, :, s - S:, :].astype(cfg.act_dtype)
+        v_in = vs[:, :, :, s - S:, :].astype(cfg.act_dtype)
+        ring_pos = jnp.arange(s - S, s)
+        slot = ring_pos % S
+        cache = cache._replace(
+            k=cache.k.at[:, :, :, slot, :].set(k_in),
+            v=cache.v.at[:, :, :, slot, :].set(v_in),
+            stored_pos=cache.stored_pos.at[:, slot].set(
+                jnp.broadcast_to(ring_pos[None], (b, S)).astype(jnp.int32)),
+        )
+    cache = cache._replace(pos=jnp.full((b,), s, jnp.int32))
+    return logits, cache
+
+
+def decoder_decode_step(params, cache: KVCache, tokens: jax.Array,
+                        cfg: ModelConfig) -> Tuple[jax.Array, KVCache]:
+    """One token for the whole batch.  tokens: (b, 1)."""
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    def body(x, inputs):
+        layer_params, ck, cv = inputs
+        h = rmsnorm(x, layer_params["ln_attn"].value)
+        y, k_new, v_new = attention_decode(
+            layer_params["attn"], h, cfg, cache_k=ck, cache_v=cv,
+            stored_pos=cache.stored_pos, pos=cache.pos)
+        x = x + y
+        h = rmsnorm(x, layer_params["ln_mlp"].value)
+        if "moe" in layer_params:
+            y, _ = moe_apply(layer_params["moe"], h, cfg)
+        else:
+            y = mlp_apply(layer_params["mlp"], h, cfg)
+        return x + y, (k_new, v_new)
+
+    x, (ks, vs) = jax.lax.scan(body, x,
+                               (params["layers"], cache.k, cache.v),
+                               unroll=_unroll(cfg))
+    x = rmsnorm(x, params["ln_f"].value)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"]["head"].value,
+                        preferred_element_type=F32)
+    cache = _write_slot(cache, ks, vs)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# ssm (mamba2)
+# ---------------------------------------------------------------------------
+
+class SSMState(NamedTuple):
+    layers: SSMCache       # stacked (L, ...)
+    pos: jax.Array
+
+
+def ssm_prefill(params, tokens: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, SSMState]:
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["ln"].value)
+        y, c = mamba2_apply(lp["mixer"], h, cfg, return_cache=True)
+        return x + y, c
+
+    x, caches = jax.lax.scan(body, x, params["layers"],
+                              unroll=_unroll(cfg))
+    x = rmsnorm(x, params["ln_f"].value)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["embed"]["head"].value,
+                        preferred_element_type=F32)
+    b = tokens.shape[0]
+    return logits, SSMState(caches, jnp.full((b,), tokens.shape[1], jnp.int32))
+
+
+def ssm_decode_step(params, state: SSMState, tokens: jax.Array,
+                    cfg: ModelConfig) -> Tuple[jax.Array, SSMState]:
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    def body(x, inputs):
+        lp, c = inputs
+        h = rmsnorm(x, lp["ln"].value)
+        y, c2 = mamba2_decode(lp["mixer"], h, cfg, c)
+        return x + y, c2
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], state.layers),
+                              unroll=_unroll(cfg))
+    x = rmsnorm(x, params["ln_f"].value)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"]["head"].value,
+                        preferred_element_type=F32)
+    return logits, SSMState(caches, state.pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# hybrid (recurrentgemma)
+# ---------------------------------------------------------------------------
+
+class HybridState(NamedTuple):
+    layers: Tuple          # per-layer: KVCache-like tuple or RGLRUCache
+    pos: jax.Array
+
+
+def hybrid_prefill(params, tokens: jax.Array, cfg: ModelConfig, *,
+                   max_seq: int) -> Tuple[jax.Array, HybridState]:
+    x = embed_tokens(params["embed"], tokens, cfg)
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    kinds = T.hybrid_layer_kinds(cfg)
+    caches: List[Any] = []
+    for lp, kind in zip(params["layers"], kinds):
+        h = rmsnorm(x, lp["ln_mix"].value)
+        if kind == "attn":
+            y, (k, v) = attention_apply(lp["attn"], h, cfg, pos=pos,
+                                        causal=True, return_kv=True)
+            c = init_kv_cache(cfg, b, max_seq, n_layers=1)
+            S = c.k.shape[3]
+            if S >= s:
+                c = c._replace(
+                    k=c.k.at[0, :, :, :s].set(k.astype(cfg.act_dtype)),
+                    v=c.v.at[0, :, :, :s].set(v.astype(cfg.act_dtype)),
+                    stored_pos=c.stored_pos.at[:, :s].set(
+                        jnp.broadcast_to(jnp.arange(s)[None], (b, s))))
+            else:
+                # ring fill: slot = pos % S is a permutation of 0..S-1 for
+                # the last S positions; write via inverse permutation
+                # (avoids mixed scalar+array advanced indexing)
+                ring_pos = jnp.arange(s - S, s)
+                slot = ring_pos % S
+                inv = jnp.argsort(slot)
+                c = c._replace(
+                    k=c.k.at[0].set(
+                        k[:, :, s - S:][:, :, inv].astype(cfg.act_dtype)),
+                    v=c.v.at[0].set(
+                        v[:, :, s - S:][:, :, inv].astype(cfg.act_dtype)),
+                    stored_pos=c.stored_pos.at[:].set(
+                        jnp.broadcast_to(ring_pos[inv][None],
+                                         (b, S)).astype(jnp.int32)))
+            c = c._replace(pos=jnp.full((b,), s, jnp.int32))
+            caches.append(c)
+        else:
+            y, c = rglru_block_apply(lp["rglru"], h, cfg, return_cache=True)
+            caches.append(c)
+        x = x + y
+        h = rmsnorm(x, lp["ln_mlp"].value)
+        x = x + mlp_apply(lp["mlp"], h, cfg)
+    x = rmsnorm(x, params["ln_f"].value)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["embed"]["head"].value,
+                        preferred_element_type=F32)
+    return logits, HybridState(tuple(caches), jnp.full((b,), s, jnp.int32))
+
+
+def hybrid_decode_step(params, state: HybridState, tokens: jax.Array,
+                       cfg: ModelConfig) -> Tuple[jax.Array, HybridState]:
+    x = embed_tokens(params["embed"], tokens, cfg)
+    kinds = T.hybrid_layer_kinds(cfg)
+    new_caches: List[Any] = []
+    for lp, kind, c in zip(params["layers"], kinds, state.layers):
+        h = rmsnorm(x, lp["ln_mix"].value)
+        if kind == "attn":
+            y, k_new, v_new = attention_decode(
+                lp["attn"], h, cfg, cache_k=c.k[0], cache_v=c.v[0],
+                stored_pos=c.stored_pos, pos=state.pos)
+            c = c._replace(pos=state.pos)
+            c = _write_slot(c, k_new[None], v_new[None])
+            new_caches.append(c)
+        else:
+            y, c2 = rglru_block_decode(lp["rglru"], h, cfg, c)
+            new_caches.append(c2)
+        x = x + y
+        h = rmsnorm(x, lp["ln_mlp"].value)
+        x = x + mlp_apply(lp["mlp"], h, cfg)
+    x = rmsnorm(x, params["ln_f"].value)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"]["head"].value,
+                        preferred_element_type=F32)
+    return logits, HybridState(tuple(new_caches), state.pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# encdec (whisper): decode over decoder positions with cross-attn to the
+# (fixed) encoder output.
+# ---------------------------------------------------------------------------
+
+class EncDecState(NamedTuple):
+    self_kv: KVCache
+    cross_k: jax.Array      # (L, b, h, s_enc, hd)
+    cross_v: jax.Array
+    pos: jax.Array
+
+
+def encdec_prefill(params, frames: jax.Array, tokens: jax.Array,
+                   cfg: ModelConfig, *, max_seq: int
+                   ) -> Tuple[jax.Array, EncDecState]:
+    enc = T.encoder_apply(params, frames, cfg)
+    b, s = tokens.shape
+    x = embed_tokens(params["embed"], tokens, cfg)
+    x = x + T._sinusoid(s, cfg.d_model, cfg.act_dtype)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["ln_self"].value)
+        y, (k, v) = attention_apply(lp["self_attn"], h, cfg, pos=pos,
+                                    causal=True, return_kv=True,
+                                    use_rope=False)
+        x = x + y
+        h = rmsnorm(x, lp["ln_cross"].value)
+        kx = jnp.einsum("bsd,dhk->bhsk", enc, lp["cross_attn"]["wk"].value,
+                        preferred_element_type=F32).astype(cfg.act_dtype)
+        vx = jnp.einsum("bsd,dhk->bhsk", enc, lp["cross_attn"]["wv"].value,
+                        preferred_element_type=F32).astype(cfg.act_dtype)
+        x = x + attention_apply(lp["cross_attn"], h, cfg, pos=pos,
+                                causal=False, kv_override=(kx, vx))
+        h = rmsnorm(x, lp["ln_mlp"].value)
+        return x + mlp_apply(lp["mlp"], h, cfg), (k, v, kx, vx)
+
+    x, (ks, vs, kxs, vxs) = jax.lax.scan(body, x, params["dec_layers"],
+                                         unroll=_unroll(cfg))
+    x = rmsnorm(x, params["ln_f"].value)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["embed"]["head"].value,
+                        preferred_element_type=F32)
+    cache = init_kv_cache(cfg, b, max_seq)
+    cache = cache._replace(
+        k=cache.k.at[:, :, :, :s].set(ks.astype(cfg.act_dtype)),
+        v=cache.v.at[:, :, :, :s].set(vs.astype(cfg.act_dtype)),
+        stored_pos=cache.stored_pos.at[:, :s].set(
+            jnp.broadcast_to(jnp.arange(s)[None], (b, s))),
+        pos=jnp.full((b,), s, jnp.int32))
+    return logits, EncDecState(cache, kxs, vxs, jnp.full((b,), s, jnp.int32))
+
+
+def encdec_decode_step(params, state: EncDecState, tokens: jax.Array,
+                       cfg: ModelConfig) -> Tuple[jax.Array, EncDecState]:
+    b = tokens.shape[0]
+    x = embed_tokens(params["embed"], tokens, cfg)
+    # sinusoidal position of the current step (uniform pos assumed batchwide)
+    pe_table = T._sinusoid(int(state.self_kv.k.shape[3]) + 1,
+                           cfg.d_model, cfg.act_dtype)
+    x = x + pe_table[state.pos[0]][None, None]
+    cache = state.self_kv
+
+    def body(x, inputs):
+        lp, ck, cv, kx, vx = inputs
+        h = rmsnorm(x, lp["ln_self"].value)
+        y, k_new, v_new = attention_decode(
+            lp["self_attn"], h, cfg, cache_k=ck, cache_v=cv,
+            stored_pos=cache.stored_pos, pos=cache.pos, use_rope=False)
+        x = x + y
+        h = rmsnorm(x, lp["ln_cross"].value)
+        x = x + attention_apply(lp["cross_attn"], h, cfg,
+                                pos=cache.pos[:, None], causal=False,
+                                kv_override=(kx, vx))
+        h = rmsnorm(x, lp["ln_mlp"].value)
+        return x + mlp_apply(lp["mlp"], h, cfg), (k_new, v_new)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache.k, cache.v,
+                  state.cross_k, state.cross_v), unroll=_unroll(cfg))
+    x = rmsnorm(x, params["ln_f"].value)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"]["head"].value,
+                        preferred_element_type=F32)
+    cache = _write_slot(cache, ks, vs)
+    return logits, state._replace(self_kv=cache, pos=state.pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# dispatch by family
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch: Dict, cfg: ModelConfig, *, max_seq: int):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return decoder_prefill(params, batch["tokens"], cfg, max_seq=max_seq,
+                               patch_embeds=batch.get("patch_embeds"))
+    if cfg.family == "ssm":
+        return ssm_prefill(params, batch["tokens"], cfg)
+    if cfg.family == "hybrid":
+        return hybrid_prefill(params, batch["tokens"], cfg, max_seq=max_seq)
+    if cfg.family == "encdec":
+        return encdec_prefill(params, batch["frames"], batch["tokens"], cfg,
+                              max_seq=max_seq)
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, state, tokens: jax.Array, cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return decoder_decode_step(params, state, tokens, cfg)
+    if cfg.family == "ssm":
+        return ssm_decode_step(params, state, tokens, cfg)
+    if cfg.family == "hybrid":
+        return hybrid_decode_step(params, state, tokens, cfg)
+    if cfg.family == "encdec":
+        return encdec_decode_step(params, state, tokens, cfg)
+    raise ValueError(cfg.family)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
+    """Fresh (empty) decode state sized for ``max_seq`` context -- the
+    dry-run serve_step input (decode_32k / long_500k cells)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        c = init_kv_cache(cfg, batch, max_seq)
+        return c._replace(pos=jnp.full((batch,), max_seq - 1, jnp.int32),
+                          stored_pos=jnp.broadcast_to(
+                              jnp.arange(c.k.shape[3])[None],
+                              (batch, c.k.shape[3])).astype(jnp.int32))
+    if cfg.family == "ssm":
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape),
+            init_ssm_cache(cfg, batch))
+        return SSMState(stacked, jnp.full((batch,), max_seq - 1, jnp.int32))
+    if cfg.family == "hybrid":
+        kinds = T.hybrid_layer_kinds(cfg)
+        caches = []
+        for kind in kinds:
+            if kind == "attn":
+                c = init_kv_cache(cfg, batch, max_seq, n_layers=1)
+                S = c.k.shape[3]
+                caches.append(c._replace(
+                    pos=jnp.full((batch,), max_seq - 1, jnp.int32),
+                    stored_pos=jnp.broadcast_to(
+                        jnp.arange(max_seq - S, max_seq)[None],
+                        (batch, S)).astype(jnp.int32)))
+            else:
+                caches.append(init_rglru_cache(cfg, batch))
+        return HybridState(tuple(caches),
+                           jnp.full((batch,), max_seq - 1, jnp.int32))
+    if cfg.family == "encdec":
+        c = init_kv_cache(cfg, batch, max_seq)
+        c = c._replace(pos=jnp.full((batch,), max_seq - 1, jnp.int32),
+                       stored_pos=jnp.broadcast_to(
+                           jnp.arange(c.k.shape[3])[None],
+                           (batch, c.k.shape[3])).astype(jnp.int32))
+        hd = cfg.hd
+        cross = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, cfg.enc_seq,
+                           hd), cfg.act_dtype)
+        return EncDecState(c, cross, cross,
+                           jnp.full((batch,), max_seq - 1, jnp.int32))
+    raise ValueError(cfg.family)

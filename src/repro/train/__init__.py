@@ -1,0 +1,7 @@
+"""Training substrate: optimizer, train step, checkpointing, compression."""
+from .checkpoint import AsyncCheckpointer, latest_step, restore, save
+from .compress import (CompressState, compressed_psum, ef_compress_grads,
+                       init_compress_state)
+from .optimizer import (AdamWConfig, OptState, adamw_update, init_opt_state,
+                        lr_schedule, zero_pspec)
+from .train_step import make_train_step

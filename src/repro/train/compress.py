@@ -1,0 +1,72 @@
+"""Error-feedback int8 gradient compression.
+
+For multi-pod training the gradient all-reduce over the slow pod axis
+dominates; 1-byte quantization with error feedback (Seide et al. / EF-SGD
+family) cuts those bytes 4x while keeping convergence (the quantization
+error is carried and re-injected, so the compressed SGD direction is
+unbiased over time).
+
+``ef_compress_grads`` implements the state + quantize/dequantize pair on
+boxed gradient trees (per-tensor absmax scale).  On the wire this pairs
+with the shard_map ring all-reduce in ``compressed_psum`` below, which
+reduces int8 payloads over a named axis (demonstrated in tests on the
+host-device mesh; on a real pod the axis would be "pod").
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import Boxed
+
+F32 = jnp.float32
+
+
+class CompressState(NamedTuple):
+    err: Any      # boxed tree of carried quantization errors (fp32)
+
+
+def init_compress_state(params) -> CompressState:
+    is_boxed = lambda x: isinstance(x, Boxed)
+    err = jax.tree.map(lambda b: Boxed(jnp.zeros(b.value.shape, F32), b.axes),
+                       params, is_leaf=is_boxed)
+    return CompressState(err)
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_compress_grads(grads, state: Optional[CompressState]
+                      ) -> Tuple[Any, CompressState]:
+    """Quantize grads to int8 (+error feedback); returns dequantized grads
+    (what the optimizer consumes) and the updated error state."""
+    if state is None:
+        state = init_compress_state(grads)
+    is_boxed = lambda x: isinstance(x, Boxed)
+    g_leaves, treedef = jax.tree.flatten(grads, is_leaf=is_boxed)
+    e_leaves = treedef.flatten_up_to(state.err)
+    new_g, new_e = [], []
+    for g, e in zip(g_leaves, e_leaves):
+        corrected = g.value.astype(F32) + e.value
+        q, scale = _quantize(corrected)
+        deq = q.astype(F32) * scale
+        new_g.append(Boxed(deq.astype(g.value.dtype), g.axes))
+        new_e.append(Boxed(corrected - deq, e.axes))
+    return treedef.unflatten(new_g), CompressState(treedef.unflatten(new_e))
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-on-the-wire psum over a mesh axis (use inside shard_map).
+
+    Quantize locally, all_gather the int8 payload + per-shard scales,
+    dequantize-and-sum.  Wire bytes: n/4 vs fp32 psum (scales are O(1)).
+    """
+    q, scale = _quantize(x.astype(F32))
+    qs = jax.lax.all_gather(q, axis_name)            # (p, ...) int8
+    ss = jax.lax.all_gather(scale, axis_name)        # (p,)
+    return jnp.tensordot(ss, qs.astype(F32), axes=((0,), (0,)))

@@ -1,0 +1,32 @@
+"""Train-step factory: loss -> grads -> (optionally compressed) -> AdamW."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, loss_fn
+from .compress import CompressState, ef_compress_grads
+from .optimizer import AdamWConfig, OptState, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    compress: bool = False) -> Callable:
+    """Returns train_step(params, opt_state, batch[, comp_state])."""
+
+    def train_step(params, opt_state: OptState, batch: Dict,
+                   comp_state: Optional[CompressState] = None):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg))(params)
+        if compress:
+            grads, comp_state = ef_compress_grads(grads, comp_state)
+        params, opt_state, info = adamw_update(params, grads, opt_state,
+                                               opt_cfg)
+        metrics = {"loss": loss, **info}
+        if compress:
+            return params, opt_state, comp_state, metrics
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,78 @@
+"""Unit tests for the dry-run analysis tooling (no 512-device init)."""
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import collective_bytes
+
+
+SYNTH_HLO = """\
+HloModule jit_train_step
+
+%region_cond.1 (arg.1: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(32)
+  ROOT %cmp = pred[] compare(%counter, %c), direction=LT
+}
+
+%region_body.2 (arg.2: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups={{0,1}}
+  %ag = bf16[4,256]{1,0} all-gather(%y), dimensions={0}
+  ROOT %t = tuple(%next, %ar2)
+}
+
+ENTRY %main.3 (p0: f32[8]) -> f32[8] {
+  %w = (s32[], f32[8]) while(%init), condition=%region_cond.1, body=%region_body.2
+  %ar_top = f32[64]{0} all-reduce(%z), replica_groups={{0,1}}
+  %rs = f32[32]{0} reduce-scatter(%q), dimensions={0}
+  %done = f32[8]{0} all-reduce-done(%started)
+  ROOT %out = f32[8] add(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_loop_trip_correction():
+    out = collective_bytes(SYNTH_HLO)
+    # while body: trip count 32 from the condition constant
+    ar_body = 16 * 128 * 4 * 32
+    ag_body = 4 * 256 * 2 * 32
+    ar_top = 64 * 4
+    rs_top = 32 * 4
+    assert out["all-reduce"] == ar_body + ar_top
+    assert out["all-gather"] == ag_body
+    assert out["reduce-scatter"] == rs_top
+    assert out["n_while_loops"] == 1
+    assert out["total"] == ar_body + ag_body + ar_top + rs_top
+
+
+def test_collective_bytes_skips_done_ops():
+    txt = "ENTRY %m (p: f32[4]) -> f32[4] {\n" \
+          "  %d = f32[1024]{0} all-reduce-done(%s)\n}\n"
+    out = collective_bytes(txt)
+    assert out["total"] == 0.0
+
+
+def test_roofline_model_flops():
+    from repro.launch.roofline import model_flops
+    rec = {"kind": "train", "n_active_params": 1e9, "seq": 1024,
+           "global_batch": 8}
+    assert model_flops(rec) == 6e9 * 1024 * 8 / 1.0
+    rec["kind"] = "decode"
+    assert model_flops(rec) == 2e9 * 8
+    rec["kind"] = "prefill"
+    assert model_flops(rec) == 2e9 * 1024 * 8
+
+
+def test_roofline_row_bottleneck():
+    from repro.launch.roofline import roofline_row
+    rec = {
+        "arch": "x", "shape": "train_4k", "kind": "train", "chips": 256,
+        "seq": 4096, "global_batch": 256,
+        "n_active_params": 8e9, "n_params": 8e9,
+        "flops_global": 5e16, "bytes_global_unfused": 1e15,
+        "collective_bytes_per_device": {"total": 2e11},
+        "memory_per_device": {"argument_bytes": 2e9, "output_bytes": 2e9,
+                              "temp_bytes": 5e10},
+    }
+    row = roofline_row(rec)
+    assert row["bottleneck"] in ("compute", "memory", "collective")
+    assert 0 < row["roofline_fraction"] <= 1.0
+    assert abs(row["t_collective_s"] - 4.0) < 1e-6   # 2e11 / 5e10

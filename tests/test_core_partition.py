@@ -1,0 +1,215 @@
+"""Property + unit tests for the paper's core algorithms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+
+
+# ---------------------------------------------------------------------------
+# SFC curves
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_morton_bijective(seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.integers(0, 1024, (256, 3)).astype(np.uint32))
+    assert (core.morton_decode(core.morton_encode(g)) == g).all()
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_hilbert_bijective(seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.integers(0, 1024, (256, 3)).astype(np.uint32))
+    assert (core.hilbert_decode(core.hilbert_encode(g)) == g).all()
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_hilbert_unit_steps(bits):
+    """Defining property: consecutive curve points are grid neighbours."""
+    n = 1 << bits
+    keys = jnp.arange(n**3, dtype=jnp.uint32)
+    pts = np.asarray(core.hilbert_decode(keys, bits), dtype=np.int64)
+    d = np.abs(np.diff(pts, axis=0)).sum(axis=1)
+    assert d.max() == 1
+    # and the encode is its exact inverse / a permutation
+    back = np.asarray(core.hilbert_encode(jnp.asarray(pts, jnp.uint32), bits))
+    assert (np.sort(back) == np.arange(n**3)).all()
+
+
+def test_morton_locality_weaker_than_hilbert():
+    """Morton has larger jumps (the paper's stated trade-off)."""
+    bits = 4
+    n = 1 << bits
+    keys = jnp.arange(n**3, dtype=jnp.uint32)
+    hp = np.asarray(core.hilbert_decode(keys, bits), dtype=np.int64)
+    mp = np.asarray(core.morton_decode(keys, bits), dtype=np.int64)
+    jump_h = np.abs(np.diff(hp, axis=0)).sum(axis=1).max()
+    jump_m = np.abs(np.diff(mp, axis=0)).sum(axis=1).max()
+    assert jump_h == 1 and jump_m > 1
+
+
+def test_box_map_uniform_preserves_aspect():
+    """PHG's map keeps x spread over the full axis, squeezes y/z; Zoltan's
+    per-axis map stretches y/z to fill (aspect distortion)."""
+    rng = np.random.default_rng(0)
+    coords = jnp.asarray(rng.random((1000, 3)) * np.array([10.0, 1.0, 1.0]))
+    lo, hi = core.bounding_box(coords)
+    g_uni = np.asarray(core.box_map(coords, lo, hi, uniform=True))
+    g_zol = np.asarray(core.box_map(coords, lo, hi, uniform=False))
+    assert g_uni[:, 0].max() > 900 and g_uni[:, 1].max() < 150
+    assert g_zol[:, 1].max() > 900  # stretched
+
+
+# ---------------------------------------------------------------------------
+# 1-D partition (paper section 2.3)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 32))
+@settings(max_examples=25, deadline=None)
+def test_prefix_sum_balance_bound(seed, p):
+    """Alg. 1 balance: every part weight <= W/p + max single weight."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(p, 2000))
+    w = jnp.asarray(rng.random(n).astype(np.float32) + 0.01)
+    parts = core.prefix_sum_parts(w, p)
+    pw = np.asarray(jax.ops.segment_sum(w, parts, num_segments=p))
+    W = float(jnp.sum(w))
+    assert pw.max() <= W / p + float(w.max()) + 1e-3
+    # parts are contiguous in order (interval property)
+    pn = np.asarray(parts)
+    assert (np.diff(pn) >= 0).all()
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=15, deadline=None)
+def test_ksection_matches_exact(seed):
+    rng = np.random.default_rng(seed)
+    n, p = 3000, 8
+    keys = jnp.asarray(rng.integers(0, 2**20, n).astype(np.uint32))
+    w = jnp.asarray(rng.random(n).astype(np.float32) + 0.01)
+    exact = core.sorted_exact(keys, w, p)
+    ks = core.ksection(keys, w, p, k=8, iters=14)
+    imb_exact = float(core.imbalance(exact.parts, w, p))
+    imb_ks = float(core.imbalance(ks.parts, w, p))
+    # ksection converges near the exact split (within a few percent)
+    assert imb_ks < imb_exact + 0.08
+    # both respect key ordering: part id is monotone in key
+    order = np.argsort(np.asarray(keys), kind="stable")
+    assert (np.diff(np.asarray(ks.parts)[order]) >= 0).all()
+
+
+def test_distributed_prefix_matches_serial():
+    """shard_map Algorithm 1 == single-device Algorithm 1."""
+    rng = np.random.default_rng(3)
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        pytest.skip("needs >1 placeholder device")
+    from jax.sharding import Mesh, PartitionSpec as P
+    n, p = 64 * n_dev, 8
+    w = jnp.asarray(rng.random(n).astype(np.float32))
+    mesh = Mesh(np.array(jax.devices()), ("x",))
+    f = jax.shard_map(
+        lambda lw: core.distributed_prefix_parts(lw, p, "x"),
+        mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+    got = np.asarray(f(w))
+    want = np.asarray(core.prefix_sum_parts(w, p))
+    assert (got == want).all()
+
+
+# ---------------------------------------------------------------------------
+# Refinement-tree partition (paper section 2.1)
+# ---------------------------------------------------------------------------
+
+def test_rtk_forest_matches_prefix():
+    forest = core.RefinementForest.from_roots(4)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        leaves = np.flatnonzero(forest.child0 == -1)
+        pick = rng.choice(leaves, size=max(1, leaves.size // 3),
+                          replace=False)
+        forest.split(pick)
+    w = np.ones(forest.n_nodes, np.float64)
+    parts = core.rtk_partition_forest(forest, w, 4)
+    # equal unit weights -> equal-count contiguous blocks
+    counts = np.bincount(parts, minlength=4)
+    assert counts.max() - counts.min() <= 1
+    assert (np.diff(parts) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Oliker--Biswas remap (paper section 2.4)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 12))
+@settings(max_examples=25, deadline=None)
+def test_remap_beats_identity(seed, p):
+    rng = np.random.default_rng(seed)
+    n = 500
+    old = jnp.asarray(rng.integers(0, p, n).astype(np.int32))
+    new = jnp.asarray(rng.integers(0, p, n).astype(np.int32))
+    w = jnp.asarray(rng.random(n).astype(np.float32))
+    relab, perm = core.remap(old, new, w, p)
+    # perm is a permutation
+    assert sorted(np.asarray(perm).tolist()) == list(range(p))
+    before = float(core.migration_volume(old, new, w, p)["TotalV"])
+    after = float(core.migration_volume(old, relab, w, p)["TotalV"])
+    assert after <= before + 1e-4
+
+
+def test_remap_recovers_relabelling():
+    """Pure relabelling must be undone completely (TotalV -> 0)."""
+    rng = np.random.default_rng(1)
+    p, n = 8, 400
+    old = jnp.asarray(rng.integers(0, p, n).astype(np.int32))
+    w = jnp.ones(n, jnp.float32)
+    shuffled = jnp.asarray((np.asarray(old) + 3) % p)
+    relab, _ = core.remap(old, shuffled, w, p)
+    assert float(core.migration_volume(old, relab, w, p)["TotalV"]) == 0.0
+
+
+def test_greedy_map_jnp_matches_host():
+    rng = np.random.default_rng(2)
+    S = rng.random((8, 8))
+    perm_h = core.greedy_map(S)
+    perm_j = np.asarray(core.greedy_map_jnp(jnp.asarray(S)))
+    # greedy retention identical (ties may reorder but score equal)
+    score_h = S[perm_h, np.arange(8)].sum()
+    score_j = S[perm_j, np.arange(8)].sum()
+    assert abs(score_h - score_j) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# RCB + balancer end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["hsfc", "msfc", "hsfc_zoltan", "rcb",
+                                    "rtk"])
+def test_balancer_all_methods(method):
+    rng = np.random.default_rng(0)
+    n, p = 5000, 16
+    coords = jnp.asarray(rng.random((n, 3)) * np.array([5.0, 1.0, 1.0]))
+    w = jnp.asarray(rng.random(n).astype(np.float32) + 0.1)
+    b = core.DynamicLoadBalancer(p, method)
+    r = b.balance(w, coords=None if method == "rtk" else coords)
+    assert r.info["imbalance"] < 1.05
+    assert np.asarray(r.parts).min() >= 0
+    assert np.asarray(r.parts).max() < p
+
+
+def test_balancer_incremental_migration_small():
+    """Small weight perturbation -> small migration (incrementality)."""
+    rng = np.random.default_rng(0)
+    n, p = 8000, 16
+    coords = jnp.asarray(rng.random((n, 3)))
+    w = jnp.ones(n, jnp.float32)
+    b = core.DynamicLoadBalancer(p, "hsfc")
+    r1 = b.balance(w, coords=coords)
+    w2 = w.at[:200].set(1.3)   # perturb 2.5% of weights
+    r2 = b.balance(w2, coords=coords, old_parts=r1.parts)
+    moved = float(r2.info["TotalV"]) / float(jnp.sum(w2))
+    assert moved < 0.08, f"migration {moved:.2%} not incremental"

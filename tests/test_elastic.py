@@ -1,0 +1,73 @@
+"""Elastic scaling: repartition + remap when the process count changes
+(DESIGN.md section 7 -- the paper's section 2.4 machinery at p_old != p_new)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DynamicLoadBalancer, greedy_map, migration_volume,
+                        similarity_matrix)
+
+
+def test_scale_up_remap_retains_data():
+    """Going 8 -> 12 processes: old owners keep most of their items."""
+    rng = np.random.default_rng(0)
+    n, p_old, p_new = 4000, 8, 12
+    coords = jnp.asarray(rng.random((n, 3)).astype(np.float32))
+    w = jnp.ones(n, jnp.float32)
+
+    bal_old = DynamicLoadBalancer(p_old, "hsfc")
+    old = bal_old.balance(w, coords=coords).parts
+
+    bal_new = DynamicLoadBalancer(p_new, "hsfc", use_remap=False)
+    new = bal_new.balance(w, coords=coords).parts
+
+    S = similarity_matrix(old, new, w, p_old, p_new)
+    perm = greedy_map(np.asarray(S))
+    relabeled = jnp.asarray(perm)[new]
+
+    # every new part got a distinct process id
+    assert len(set(perm.tolist())) == p_new
+    # retention with remap beats the raw labelling (new parts handed to
+    # freshly provisioned processes (id >= p_old) retain nothing)
+    raw_keep = float(np.asarray(S)[np.arange(min(p_old, p_new)),
+                                   np.arange(min(p_old, p_new))].sum())
+    surv = perm < p_old
+    remap_keep = float(np.asarray(S)[perm[surv],
+                                     np.arange(p_new)[surv]].sum())
+    assert remap_keep >= raw_keep
+    # at least half the weight stays on a surviving process
+    stays = float(jnp.sum(jnp.where(relabeled == old, w, 0.0)))
+    assert stays / float(jnp.sum(w)) > 0.5
+
+
+def test_scale_down_all_parts_covered():
+    """Going 8 -> 4: every item lands on a valid process, balanced."""
+    rng = np.random.default_rng(1)
+    n = 2000
+    coords = jnp.asarray(rng.random((n, 3)).astype(np.float32))
+    w = jnp.asarray((rng.random(n) + 0.1).astype(np.float32))
+    old = DynamicLoadBalancer(8, "hsfc").balance(w, coords=coords).parts
+    res = DynamicLoadBalancer(4, "hsfc").balance(w, coords=coords)
+    assert res.info["imbalance"] < 1.05
+    mv = migration_volume(old % 4, res.parts, w, 4)
+    assert float(mv["TotalV"]) < float(jnp.sum(w))  # not a full reshuffle
+
+
+def test_straggler_reweighting_shifts_load():
+    """Measured per-shard step times as weights shift work off slow hosts
+    (DESIGN.md section 7 straggler mitigation)."""
+    rng = np.random.default_rng(2)
+    n, p = 4096, 8
+    coords = jnp.asarray(rng.random((n, 3)).astype(np.float32))
+    w_uniform = jnp.ones(n, jnp.float32)
+    bal = DynamicLoadBalancer(p, "hsfc")
+    base = bal.balance(w_uniform, coords=coords)
+    # host owning part 0 is 2x slow -> its items cost 2x
+    slow_items = np.asarray(base.parts) == 0
+    w_slow = jnp.where(jnp.asarray(slow_items), 2.0, 1.0)
+    rebal = bal.balance(w_slow, coords=coords, old_parts=base.parts)
+    counts = np.bincount(np.asarray(rebal.parts), minlength=p)
+    # the slow host now holds fewer items than average
+    n_slow = counts[np.argmax(np.bincount(
+        np.asarray(rebal.parts)[slow_items], minlength=p))]
+    assert rebal.info["imbalance"] < 1.1  # cost-balanced
+    assert counts.min() < counts.mean()   # item counts became uneven

@@ -1,0 +1,144 @@
+"""Adaptive-FEM substrate tests: refinement, assembly, solve, adapt loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fem import (HelmholtzProblem, build_elements, cylinder_mesh,
+                       load_vector, refine, coarsen, solve_dirichlet,
+                       stiffness_matvec, uniform_refine, unit_cube_mesh,
+                       zz_estimate, doerfler_mark)
+from repro.fem.refine import _hanging_mask
+from repro.core import DynamicLoadBalancer
+
+
+def test_kuhn_mesh_volume():
+    m = unit_cube_mesh(3)
+    assert abs(m.volumes().sum() - 1.0) < 1e-12
+    assert m.n_tets == 6 * 27
+
+
+def test_uniform_refine_conforming():
+    m = unit_cube_mesh(2)
+    uniform_refine(m, 3)
+    assert m.n_tets == 48 * 8
+    assert abs(m.volumes().sum() - 1.0) < 1e-12
+    assert not _hanging_mask(m).any()
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=8, deadline=None)
+def test_random_local_refinement_invariants(seed):
+    """Any random marking sequence keeps the mesh conforming, volume
+    preserving, and DFS order consistent with the refinement forest."""
+    rng = np.random.default_rng(seed)
+    m = unit_cube_mesh(2)
+    for _ in range(4):
+        marked = rng.random(m.n_tets) < 0.3
+        refine(m, marked)
+        assert not _hanging_mask(m).any()
+    assert abs(m.volumes().sum() - 1.0) < 1e-10
+    assert (m.forest.leaves_dfs() == m.leaf_nodes).all()
+    # faces shared by at most 2 leaves (conformity)
+    adj = m.face_adjacency()
+    assert adj.shape[0] > 0
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=5, deadline=None)
+def test_coarsen_inverts_refine(seed):
+    rng = np.random.default_rng(seed)
+    m = unit_cube_mesh(2)
+    refine(m, rng.random(m.n_tets) < 0.4)
+    n_after_refine = m.n_tets
+    # coarsen everything repeatedly -> returns toward the initial count
+    for _ in range(6):
+        coarsen(m, np.ones(m.n_tets, bool))
+    assert m.n_tets < n_after_refine
+    assert abs(m.volumes().sum() - 1.0) < 1e-10
+    assert (m.forest.leaves_dfs() == m.leaf_nodes).all()
+    assert not _hanging_mask(m).any()
+
+
+def test_p1_linear_exactness():
+    m = unit_cube_mesh(2)
+    uniform_refine(m, 1)
+    el = build_elements(m.verts, m.tets)
+    verts = jnp.asarray(m.verts)
+    exact = lambda x: 1 + 2 * x[..., 0] - 3 * x[..., 1] + x[..., 2]
+    free = np.ones(m.n_verts)
+    free[m.boundary_vertices()] = 0.0
+    rhs = load_vector(el, verts, exact)
+    sol = solve_dirichlet(el, rhs, exact(verts), jnp.asarray(free), 1.0,
+                          tol=1e-10)
+    assert float(jnp.max(jnp.abs(sol.x - exact(verts)))) < 1e-4
+
+
+def test_helmholtz_convergence_rate():
+    """P1 L2 error ~ O(h^2) on the paper's Example 3.1 equation."""
+    prob = HelmholtzProblem()
+    errs = []
+    for lv in range(3):
+        m = unit_cube_mesh(4)
+        uniform_refine(m, 3 * lv)
+        el = build_elements(m.verts, m.tets)
+        verts = jnp.asarray(m.verts)
+        free = np.ones(m.n_verts)
+        free[m.boundary_vertices()] = 0.0
+        rhs = load_vector(el, verts, prob.f)
+        sol = solve_dirichlet(el, rhs, prob.exact(verts), jnp.asarray(free),
+                              prob.c, tol=1e-8, maxiter=6000)
+        diff = np.asarray(sol.x - prob.exact(verts))
+        vol = np.asarray(el.vol)
+        t = np.asarray(el.tets)
+        errs.append(np.sqrt(((diff[t] ** 2).mean(axis=1) * vol).sum()))
+    rate = np.log2(errs[0] / errs[1]), np.log2(errs[1] / errs[2])
+    assert rate[0] > 1.5 and rate[1] > 1.4, (errs, rate)
+
+
+def test_operator_symmetry():
+    """Matrix-free operator is symmetric: v.Au == u.Av."""
+    m = unit_cube_mesh(2)
+    el = build_elements(m.verts, m.tets)
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.random(m.n_verts).astype(np.float32))
+    v = jnp.asarray(rng.random(m.n_verts).astype(np.float32))
+    uav = float(jnp.vdot(u, stiffness_matvec(el, v, 1.0)))
+    vau = float(jnp.vdot(v, stiffness_matvec(el, u, 1.0)))
+    assert abs(uav - vau) < 1e-3 * abs(uav)
+
+
+def test_estimator_targets_peak():
+    """ZZ estimator marks elements near a sharp feature."""
+    m = unit_cube_mesh(3)
+    uniform_refine(m, 1)
+    el = build_elements(m.verts, m.tets)
+    verts = jnp.asarray(m.verts)
+    u = jnp.exp(-60.0 * jnp.sum((verts - 0.5) ** 2, axis=1))
+    eta = np.asarray(zz_estimate(el, u))
+    marked = doerfler_mark(eta, 0.4)
+    bc = m.barycenters()
+    d_marked = np.linalg.norm(bc[marked] - 0.5, axis=1).mean()
+    d_rest = np.linalg.norm(bc[~marked] - 0.5, axis=1).mean()
+    assert d_marked < d_rest
+
+
+def test_adaptive_helmholtz_reduces_error():
+    from repro.fem.adapt import solve_helmholtz_adaptive
+    m = cylinder_mesh(6, 2, length=3.0, radius=0.5)
+    r = solve_helmholtz_adaptive(m, p=8, method="hsfc", max_steps=4,
+                                 max_tets=20000, tol=1e-6)
+    errs = [s.err_l2 for s in r.stats]
+    assert errs[-1] < errs[0]
+    assert r.n_repartitions >= 1
+    assert all(s.imbalance < 1.25 for s in r.stats)
+
+
+def test_parabolic_tracks_peak():
+    from repro.fem.adapt import solve_parabolic_adaptive
+    m = unit_cube_mesh(3)
+    r = solve_parabolic_adaptive(m, p=4, method="hsfc", dt=0.02, n_steps=3,
+                                 max_tets=20000, tol=1e-6)
+    assert all(np.isfinite(s.err_l2) for s in r.stats)
+    assert all(s.err_l2 < 0.05 for s in r.stats)

@@ -1,0 +1,95 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.prefix_scan import exclusive_scan_pallas
+from repro.kernels.sfc_keys import sfc_keys_pallas
+from repro.kernels.ops import exclusive_scan_op, flash_attention_op, sfc_keys_op
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n", [1024, 4096, 8192])
+@pytest.mark.parametrize("curve", ["morton", "hilbert"])
+def test_sfc_keys_kernel(n, curve):
+    g = RNG.integers(0, 1024, (n, 3)).astype(np.int32)
+    x, y, z = (jnp.asarray(g[:, i]) for i in range(3))
+    got = sfc_keys_pallas(x, y, z, curve=curve, interpret=True)
+    fn = ref.morton_keys_ref if curve == "morton" else ref.hilbert_keys_ref
+    want = fn(jnp.asarray(g.astype(np.uint32))).astype(jnp.int32)
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("bits", [4, 8, 10])
+def test_sfc_keys_kernel_bits(bits):
+    g = RNG.integers(0, 1 << bits, (2048, 3)).astype(np.int32)
+    x, y, z = (jnp.asarray(g[:, i]) for i in range(3))
+    got = sfc_keys_pallas(x, y, z, curve="hilbert", bits=bits, interpret=True)
+    want = ref.hilbert_keys_ref(jnp.asarray(g.astype(np.uint32)),
+                                bits).astype(jnp.int32)
+    assert (got == want).all()
+
+
+def test_sfc_keys_op_padding():
+    """ops wrapper pads non-multiple sizes transparently."""
+    g = jnp.asarray(RNG.integers(0, 1024, (1000, 3)).astype(np.uint32))
+    got = sfc_keys_op(g, curve="hilbert", use_pallas=True, interpret=True)
+    want = ref.hilbert_keys_ref(g)
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("n", [2048, 8192])
+@pytest.mark.parametrize("scale", [1.0, 100.0])
+def test_prefix_scan_kernel(n, scale):
+    x = jnp.asarray((RNG.random(n) * scale).astype(np.float32))
+    got = exclusive_scan_pallas(x, interpret=True)
+    want = ref.exclusive_scan_ref(x)
+    tol = 1e-5 * scale * n
+    assert float(jnp.max(jnp.abs(got - want))) < tol
+
+
+def test_prefix_scan_op_padding():
+    x = jnp.asarray(RNG.random(3000).astype(np.float32))
+    got = exclusive_scan_op(x, use_pallas=True, interpret=True)
+    want = ref.exclusive_scan_ref(x)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-2
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,d,causal,window",
+    [(1, 4, 4, 256, 64, True, None),     # MHA causal
+     (2, 8, 2, 256, 64, True, None),     # GQA
+     (1, 4, 1, 512, 128, True, 256),     # MQA + sliding window
+     (1, 2, 2, 256, 64, False, None),    # bidirectional
+     (1, 4, 2, 384, 128, True, None)])   # non-pow2 seq
+def test_flash_attention_kernel(b, hq, hkv, s, d, causal, window):
+    q = jnp.asarray(RNG.standard_normal((b, hq, s, d)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)).astype(np.float32))
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 bq=128, bk=128, interpret=True)
+    want = ref.mha_ref(q, k, v, causal=causal, window=window)
+    assert float(jnp.max(jnp.abs(got - want))) < 2e-3
+
+
+def test_flash_attention_bf16():
+    b, hq, hkv, s, d = 1, 4, 2, 256, 64
+    q = jnp.asarray(RNG.standard_normal((b, hq, s, d)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = ref.mha_ref(q, k, v, causal=True)
+    err = jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32)))
+    assert float(err) < 3e-2
+
+
+def test_ops_dispatch_to_ref_on_cpu():
+    """Default (no pallas flag) on CPU runs the oracle path."""
+    q = jnp.asarray(RNG.standard_normal((1, 2, 128, 64)).astype(np.float32))
+    out = flash_attention_op(q, q, q, causal=True)
+    want = ref.mha_ref(q, q, q, causal=True)
+    assert float(jnp.max(jnp.abs(out - want))) == 0.0
