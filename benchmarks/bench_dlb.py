@@ -5,7 +5,23 @@ refinement front), each step re-partitions and measures migration volume
 with and without the Oliker--Biswas remap.  Paper claims: RTK/SFC are
 incremental (small migration); the remap removes the relabelling part of
 migration entirely.
+
+``--backend sharded`` runs the same drift sequence through the on-device
+pipeline (``repro.distributed.DistributedBalancer``): the whole DLB step
+-- SFC keys, Algorithm-1 scan partition, distributed remap, all_to_all
+migration -- executes inside ONE jitted shard_map region over the
+simulated 8-device mesh, with a single host sync per balance step (the
+metric read-back).  Standalone:
+
+    python -m benchmarks.bench_dlb --backend sharded
 """
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    # must be set before the first jax import for --backend sharded runs
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8").strip()
+
 import time
 
 import jax.numpy as jnp
@@ -17,14 +33,24 @@ P = 64
 N = 100_000
 STEPS = 6
 
+SHARDED_METHODS = ("msfc", "hsfc")   # SFC family only on the device path
 
-def run():
+
+def run(backend: str = "host"):
+    import jax
     rng = np.random.default_rng(0)
     coords = jnp.asarray(rng.random((N, 3)).astype(np.float32))
+    if backend == "sharded":
+        p = min(P, jax.device_count())
+        methods = list(SHARDED_METHODS)
+    else:
+        p = P
+        methods = ["rtk", "msfc", "hsfc", "rcb"]
     rows = []
-    for method in ["rtk", "msfc", "hsfc", "rcb"]:
+    for method in methods:
         for use_remap in (True, False):
-            bal = DynamicLoadBalancer(P, method, use_remap=use_remap)
+            bal = DynamicLoadBalancer(p, method, use_remap=use_remap,
+                                      backend=backend)
             old = None
             total_mig = 0.0
             t_total = 0.0
@@ -42,6 +68,21 @@ def run():
                     total_mig += r.info.get("TotalV", 0.0)
                 old = r.parts
             tag = "remap" if use_remap else "noremap"
-            rows.append((f"fig3.3/dlb/{method}/{tag}/time",
+            rows.append((f"fig3.3/dlb/{method}/{tag}/{backend}/time",
                          t_total / STEPS * 1e6, total_mig))
     return rows
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="host",
+                    choices=["host", "sharded"])
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(backend=args.backend):
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+
+
+if __name__ == "__main__":
+    main()

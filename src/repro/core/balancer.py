@@ -45,7 +45,20 @@ class DynamicLoadBalancer:
 
     def __init__(self, p: int, method: str = "hsfc", *,
                  oneD: str = "sorted", k: int = 8, iters: int = 12,
-                 use_remap: bool = True, sfc_bits: int = 10):
+                 use_remap: bool = True, sfc_bits: int = 10,
+                 backend: str = "host"):
+        """backend='host' runs the control-plane pipeline below;
+        backend='sharded' delegates the whole DLB step to
+        ``repro.distributed.DistributedBalancer`` -- one jitted shard_map
+        region over ``p`` devices (SFC methods only, needs
+        ``jax.device_count() >= p``)."""
+        if backend not in ("host", "sharded"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if backend == "sharded" and oneD != "sorted":
+            # the device pipeline implements the sorted-exact 1-D stage
+            # only; k-section (and its k/iters knobs) is host-side
+            raise ValueError(
+                f"backend='sharded' supports oneD='sorted', got {oneD!r}")
         self.p = p
         self.method = method
         self.oneD = oneD
@@ -53,6 +66,16 @@ class DynamicLoadBalancer:
         self.iters = iters
         self.use_remap = use_remap
         self.sfc_bits = sfc_bits
+        self.backend = backend
+        self._sharded = None
+
+    def _sharded_balancer(self):
+        if self._sharded is None:
+            from ..distributed.balancer import DistributedBalancer
+            self._sharded = DistributedBalancer(
+                self.p, self.method, sfc_bits=self.sfc_bits,
+                use_remap=self.use_remap)
+        return self._sharded
 
     # -- partitioning ------------------------------------------------------
     def _partition(self, coords: Optional[jax.Array], weights: jax.Array,
@@ -78,6 +101,10 @@ class DynamicLoadBalancer:
                 coords: Optional[jax.Array] = None,
                 old_parts: Optional[jax.Array] = None,
                 adjacency: Optional[jax.Array] = None) -> BalanceResult:
+        if self.backend == "sharded":
+            return self._sharded_balancer().balance(
+                weights, coords=coords, old_parts=old_parts,
+                adjacency=adjacency)
         n = int(weights.shape[0])
         # pad to the next power-of-two bucket: adaptive meshes change size
         # every step and unpadded shapes would trigger a jit recompile per

@@ -1,4 +1,7 @@
-"""Distribution: logical sharding rules, mesh helpers."""
+"""Distribution: shard_map compat shim, logical sharding rules, the
+on-device DLB pipeline (DistributedBalancer) and the migration executor."""
+from .balancer import AXIS as DLB_AXIS, DistributedBalancer
+from .migrate import MigrationResult, dispatch_slots, migrate_items
 from .sharding import (Boxed, DEFAULT_RULES, axes_tree, box, logical,
-                       pspec_tree, set_rules, spec_for, stack_axes, unbox,
-                       use_rules)
+                       pspec_tree, set_rules, shard_map, spec_for,
+                       stack_axes, unbox, use_rules)

@@ -6,6 +6,11 @@ rules are installed (single-device smoke tests) every annotation is a
 no-op.  Parameters are created *boxed* (value + logical axes) so the
 PartitionSpec tree for pjit falls out of the same structure that built the
 weights -- no drift between init and sharding.
+
+This module also exports the canonical ``shard_map`` for the repo: JAX
+moved it from ``jax.experimental.shard_map`` to ``jax.shard_map`` around
+0.5, and the pinned 0.4.x only has the experimental location.  Every
+shard_map call site imports the symbol from here so the repo runs on both.
 """
 from __future__ import annotations
 
@@ -16,6 +21,11 @@ from typing import Any, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+try:                                    # JAX >= 0.5
+    shard_map = jax.shard_map
+except AttributeError:                  # pinned 0.4.x
+    from jax.experimental.shard_map import shard_map
 
 _state = threading.local()
 

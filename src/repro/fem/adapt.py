@@ -57,6 +57,9 @@ class AdaptiveResult:
     n_repartitions: int = 0
     u: Optional[jax.Array] = None
     mesh: Optional[Mesh] = None
+    # backend='sharded': the latest on-device (p, C, ...) element packing
+    # produced by fem.parallel.shard_elements_on_device after refinement
+    sharded: Optional[object] = None
 
 
 def _l2_error(el, verts, u, exact) -> float:
@@ -75,15 +78,34 @@ def solve_helmholtz_adaptive(mesh: Mesh, *, p: int = 16,
                              max_tets: int = 200_000,
                              imbalance_trigger: float = 1.05,
                              tol: float = 1e-8,
+                             backend: str = "host",
                              verbose: bool = False) -> AdaptiveResult:
-    """Paper Example 3.1: adaptive Helmholtz on the given mesh."""
+    """Paper Example 3.1: adaptive Helmholtz on the given mesh.
+
+    backend='sharded' runs each DLB step inside one jitted shard_map
+    region (repro.distributed.DistributedBalancer; needs
+    ``jax.device_count() >= p``) and additionally re-shards the refined
+    mesh's element payloads on device (``shard_elements_on_device``) --
+    the paper's per-step data migration, exercised for real.  The PCG
+    solve itself still runs the single-device operator (the sharded
+    matvec consumes ``result.sharded``; wiring it into the solver needs
+    the halo-exchange vertex sharding noted in ROADMAP).
+    """
     prob = HelmholtzProblem()
-    balancer = DynamicLoadBalancer(p, method)
+    balancer = DynamicLoadBalancer(p, method, backend=backend)
     result = AdaptiveResult()
     old_parts = None
 
     for step in range(max_steps):
         el = build_elements(mesh.verts, mesh.tets)
+        if backend == "sharded" and jax.device_count() >= p:
+            prev = mesh.leaf_payload.get("parts")
+            if prev is not None and len(prev) == mesh.n_tets:
+                from jax.sharding import Mesh as _JMesh
+                from .parallel import AXIS as _FAXIS, shard_elements_on_device
+                _pmesh = _JMesh(np.array(jax.devices()[:p]), (_FAXIS,))
+                result.sharded = shard_elements_on_device(
+                    el, jnp.asarray(prev), p, _pmesh)
         verts = jnp.asarray(mesh.verts)
         bverts = mesh.boundary_vertices()
         free = np.ones(mesh.n_verts, np.float64)
@@ -159,10 +181,11 @@ def solve_parabolic_adaptive(mesh: Mesh, *, p: int = 16,
                              max_tets: int = 120_000,
                              coarsen_frac: float = 0.15,
                              tol: float = 1e-8,
+                             backend: str = "host",
                              verbose: bool = False) -> AdaptiveResult:
     """Paper Example 3.2: backward Euler + refine/coarsen each step."""
     prob = ParabolicProblem()
-    balancer = DynamicLoadBalancer(p, method)
+    balancer = DynamicLoadBalancer(p, method, backend=backend)
     result = AdaptiveResult()
     old_parts = None
 

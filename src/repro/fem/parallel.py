@@ -4,6 +4,18 @@ This is the compute model of the paper (section 1): each process owns the
 sub-mesh the balancer assigned to it and computes element-local work; the
 global vertex reduction is the inter-process communication.
 
+Two element-distribution paths:
+
+* ``shard_elements``           host loop packing (p, C, ...) arrays --
+                               the control-plane path for tests/setup.
+* ``shard_elements_on_device`` the production path: element payloads
+                               move between shards with the migration
+                               executor's single ``all_to_all`` (no host
+                               loop); ``reshard_elements`` composes it
+                               with ``DistributedBalancer`` so the
+                               adaptive loop re-partitions AND re-shards
+                               after every refinement step on device.
+
 JAX mapping: element arrays are laid out as (p, C, ...) -- one row per
 part, padded to the capacity C = max part size (capacity comes from the
 same prefix-sum machinery as the partition itself).  The matvec inside
@@ -19,7 +31,7 @@ in DESIGN.md).
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +39,7 @@ import numpy as np
 from jax.sharding import Mesh as JMesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..distributed.sharding import shard_map
 from .assemble import P1Elements
 
 AXIS = "fem"
@@ -60,6 +73,82 @@ def shard_elements(el: P1Elements, parts: np.ndarray, p: int) -> ShardedElements
                            el.n_verts, p)
 
 
+def shard_elements_on_device(el: P1Elements, parts: jax.Array, p: int,
+                             mesh: JMesh) -> ShardedElements:
+    """Pack per-part element lists with the migration executor.
+
+    Elements start index-sharded (shard r owns global rows [rC, (r+1)C));
+    one ``all_to_all`` inside shard_map delivers each element's payload
+    (connectivity, gradients, volume) to the shard the partition assigned
+    it.  The only host work is sizing the receive capacity from the part
+    counts (the same quantity the host packer needs for its array shapes).
+    Padding rows keep vol = 0 so they are no-ops in the sharded matvec.
+    """
+    from ..distributed.migrate import migrate_items
+    parts_h = np.asarray(parts)
+    n = int(parts_h.shape[0])
+    C_in = -(-n // p)
+    n_pad = p * C_in
+    cap = int(np.bincount(parts_h, minlength=p).max())
+
+    def pad(a, dtype=None):
+        a = jnp.asarray(a) if dtype is None else jnp.asarray(a, dtype)
+        if n_pad == n:
+            return a
+        return jnp.concatenate(
+            [a, jnp.zeros((n_pad - n,) + a.shape[1:], a.dtype)])
+
+    tets = pad(el.tets, jnp.int32)
+    grads = pad(el.grads)
+    vol = pad(el.vol)
+    dest = pad(parts, jnp.int32)
+
+    def local(tets_l, grads_l, vol_l, dest_l):
+        rank = jax.lax.axis_index(AXIS)
+        valid = rank * C_in + jnp.arange(C_in) < n
+        mig = migrate_items(
+            {"tets": tets_l, "grads": grads_l, "vol": vol_l},
+            dest_l, vol_l, AXIS, p, valid=valid, capacity=cap)
+        t = jnp.where(mig.valid[:, None], mig.payload["tets"], 0)
+        g = jnp.where(mig.valid[:, None, None], mig.payload["grads"], 0.0)
+        v = jnp.where(mig.valid, mig.payload["vol"], 0.0)
+        return t, g, v
+
+    fn = jax.jit(shard_map(local, mesh=mesh, in_specs=(P(AXIS),) * 4,
+                           out_specs=(P(AXIS),) * 3))
+    st, sg, sv = fn(tets, grads, vol, dest)
+    return ShardedElements(st.reshape(p, cap, 4),
+                           sg.reshape(p, cap, 4, 3),
+                           sv.reshape(p, cap), el.n_verts, p)
+
+
+def reshard_elements(el: P1Elements, coords: jax.Array, p: int, *,
+                     mesh: Optional[JMesh] = None,
+                     old_parts: Optional[jax.Array] = None,
+                     balancer=None):
+    """One full on-device DLB step for the FEM layer: partition + remap
+    via ``DistributedBalancer`` (one jitted shard_map region), then
+    element payload migration via ``all_to_all``.  Returns
+    (ShardedElements, BalanceResult).
+
+    Convenience one-call entry for examples/library users.  In a loop,
+    pass a persistent ``balancer`` so its compiled pipelines are reused
+    (the ``balancer=None`` default builds a fresh one per call); the
+    adaptive driver, which balances and packs at different points of its
+    step, calls ``DynamicLoadBalancer(backend='sharded')`` and
+    ``shard_elements_on_device`` separately instead.
+    """
+    from ..distributed.balancer import DistributedBalancer
+    if balancer is None:
+        balancer = DistributedBalancer(p, "hsfc")
+    if mesh is None:
+        mesh = JMesh(np.array(jax.devices()[:p]), (AXIS,))
+    w = jnp.ones(el.tets.shape[0], jnp.float32)
+    res = balancer.balance(w, coords=coords, old_parts=old_parts)
+    sel = shard_elements_on_device(el, res.parts, p, mesh)
+    return sel, res
+
+
 def make_sharded_matvec(sel: ShardedElements, mesh: JMesh, c: float = 0.0
                         ) -> Tuple[Callable, jax.Array]:
     """Returns (matvec, element arrays placed on the mesh).
@@ -88,7 +177,7 @@ def make_sharded_matvec(sel: ShardedElements, mesh: JMesh, c: float = 0.0
                                 num_segments=nv)
         return jax.lax.psum(y, AXIS)
 
-    shmap = jax.shard_map(
+    shmap = shard_map(
         local_apply, mesh=mesh,
         in_specs=(P(AXIS), P(AXIS), P(AXIS), P()),
         out_specs=P())
@@ -118,6 +207,6 @@ def sharded_diagonal(sel: ShardedElements, mesh: JMesh, c: float = 0.0
         y = jax.ops.segment_sum(d.reshape(-1), t.reshape(-1), num_segments=nv)
         return jax.lax.psum(y, AXIS)
 
-    return jax.shard_map(local_diag, mesh=mesh,
-                         in_specs=(P(AXIS),) * 3, out_specs=P())(
+    return shard_map(local_diag, mesh=mesh,
+                     in_specs=(P(AXIS),) * 3, out_specs=P())(
         tets, grads, vol)

@@ -23,7 +23,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..distributed.sharding import (Boxed, box, get_mesh, get_rules, logical)
+from ..distributed.sharding import (Boxed, box, get_mesh, get_rules, logical,
+                                    shard_map)
 from ..kernels.ops import flash_attention_op
 from .config import ModelConfig
 
@@ -260,7 +261,7 @@ def attention_apply(params, x: jax.Array, cfg: ModelConfig, *,
                             preferred_element_type=F32)
             return jax.lax.psum(yl.astype(cfg.act_dtype), ax)
 
-        y = jax.shard_map(
+        y = shard_map(
             _local_out, mesh=mesh,
             in_specs=(_P(bspec, ax, None, None), _P(ax, None, None)),
             out_specs=_P(bspec, None, None))(out, params["wo"].value)
@@ -378,7 +379,7 @@ def mlp_apply(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
                             preferred_element_type=F32)
             return jax.lax.psum(yl.astype(cfg.act_dtype), ax)
 
-        y = jax.shard_map(
+        y = shard_map(
             _local_down, mesh=mesh,
             in_specs=(_P(bspec, None, ax), _P(ax, None)),
             out_specs=_P(bspec, None, None))(h, params["wo"].value)

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..distributed.sharding import (Boxed, box, get_mesh, get_rules, logical,
-                                    spec_for)
+                                    shard_map, spec_for)
 from .config import ModelConfig
 from .layers import _init_dense
 
@@ -206,7 +206,7 @@ def _moe_ep_shardmap(params, x, gate_vals, expert_idx, cfg: ModelConfig,
         # combine experts (and f-slices for rpe > 1): ONE all-reduce
         return jax.lax.psum(part, axis).astype(cfg.act_dtype)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(batch_spec, None, None),
                   P(batch_spec, None, None),

@@ -45,7 +45,11 @@ class ServeEngine:
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_seq: int = 256, n_groups: int = 4,
-                 rebalance_every: int = 16):
+                 rebalance_every: int = 16, backend: str = "host"):
+        """backend='sharded' runs the KV-weighted group rebalancing as the
+        on-device pipeline (DistributedBalancer over ``n_groups`` devices:
+        partition + remap + migration accounting in one jitted shard_map
+        region) -- the call the multi-pod launcher makes."""
         self.params, self.cfg = params, cfg
         self.slots, self.max_seq = slots, max_seq
         self.n_groups = n_groups
@@ -55,7 +59,8 @@ class ServeEngine:
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
         self.step_count = 0
-        self.balancer = DynamicLoadBalancer(n_groups, "hsfc", oneD="sorted")
+        self.balancer = DynamicLoadBalancer(n_groups, "hsfc", oneD="sorted",
+                                            backend=backend)
         self.migration_log: List[Dict] = []
         self._decode = jax.jit(
             lambda p, s, t: decode_step(p, s, t, cfg))

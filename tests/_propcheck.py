@@ -1,0 +1,74 @@
+"""Hypothesis-or-fallback property-testing shim.
+
+Test modules import ``given``/``settings``/``strategies`` from here instead
+of from ``hypothesis`` directly.  When the real package is installed it is
+used unchanged (full shrinking etc.); when it is absent (minimal CI images,
+the pinned accelerator container) a tiny deterministic stand-in runs each
+property as a seeded parameter sweep:
+
+* ``strategies.integers(lo, hi)`` draws uniformly from [lo, hi] with a
+  per-test ``numpy`` generator seeded from the test name (stable across
+  runs and machines).
+* ``given(*strats)`` wraps the test in a loop of ``max_examples`` draws.
+* ``settings(max_examples=..., deadline=...)`` records the sweep length;
+  ``deadline`` is accepted and ignored.
+
+No shrinking, no database -- a failing example is reported with the drawn
+arguments in the assertion chain, which is enough for these tests (they
+all take integer seeds and derive their data from ``np.random``).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Integers:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def draw(self, rng: np.random.Generator) -> int:
+            # avoid np.integers' int64 range limit for [0, 2**32-1]-style
+            # bounds by drawing in float space when the span is huge
+            span = self.hi - self.lo
+            if span < 2 ** 62:
+                return self.lo + int(rng.integers(0, span + 1))
+            return self.lo + int(rng.random() * span)
+
+    class strategies:  # noqa: N801 -- mimics `hypothesis.strategies` module
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None,
+                 **_kw):
+        def deco(fn):
+            fn._propcheck_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats: _Integers):
+        def deco(fn):
+            # NB: deliberately no functools.wraps -- pytest must see a
+            # zero-arg signature, not the original one (it would resolve
+            # the drawn parameters as fixtures).
+            def sweep():
+                n = getattr(sweep, "_propcheck_max_examples",
+                            _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    fn(*(s.draw(rng) for s in strats))
+            sweep.__name__ = fn.__name__
+            sweep.__doc__ = fn.__doc__
+            sweep.__dict__.update(fn.__dict__)
+            return sweep
+        return deco

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro import core
 
@@ -110,10 +110,11 @@ def test_distributed_prefix_matches_serial():
     if n_dev < 2:
         pytest.skip("needs >1 placeholder device")
     from jax.sharding import Mesh, PartitionSpec as P
+    from repro.distributed.sharding import shard_map
     n, p = 64 * n_dev, 8
     w = jnp.asarray(rng.random(n).astype(np.float32))
     mesh = Mesh(np.array(jax.devices()), ("x",))
-    f = jax.shard_map(
+    f = shard_map(
         lambda lw: core.distributed_prefix_parts(lw, p, "x"),
         mesh=mesh, in_specs=P("x"), out_specs=P("x"))
     got = np.asarray(f(w))

@@ -1,34 +1,26 @@
-"""Multi-device semantics tests (run in a subprocess with placeholder
-devices, since the main pytest process is pinned to 1 CPU device)."""
-import os
-import subprocess
-import sys
+"""Multi-device semantics tests.
 
+These used to spawn a subprocess per test to get placeholder devices;
+``conftest.py`` now forces ``--xla_force_host_platform_device_count=8``
+before JAX is imported, so everything runs inline.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+pytestmark = pytest.mark.skipif(jax.device_count() < 8,
+                                reason="needs 8 placeholder devices")
 
 
-def _run(script: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+@pytest.mark.parametrize("e", [4, 2])   # rpe = 1 and rpe = 2 (f-sliced)
+def test_moe_ep_shardmap_parity(e):
+    from repro.models import ModelConfig
+    from repro.models.moe import init_moe, moe_apply
+    from repro.distributed.sharding import use_rules
 
-
-def test_moe_ep_shardmap_parity():
-    _run("""
-import jax, jax.numpy as jnp, numpy as np
-from repro.models import ModelConfig
-from repro.models.moe import init_moe, moe_apply
-from repro.distributed.sharding import use_rules
-
-rng = np.random.default_rng(0)
-mesh = jax.make_mesh((2, 4), ("data", "model"))
-for e in (4, 2):   # rpe = 1 and rpe = 2 (f-sliced, grok-style)
+    rng = np.random.default_rng(0)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
     cfg = ModelConfig(name="m", family="moe", n_layers=1, d_model=32,
                       n_heads=4, n_kv_heads=4, d_ff=64, vocab=64,
                       n_experts=e, top_k=2, capacity_factor=float(e),
@@ -41,59 +33,53 @@ for e in (4, 2):   # rpe = 1 and rpe = 2 (f-sliced, grok-style)
     with use_rules(rules, mesh), mesh:
         out_ep, _ = jax.jit(lambda p, xx: moe_apply(p, xx, cfg))(params, x)
     assert float(jnp.max(jnp.abs(out_ref - out_ep))) < 1e-4, e
-    g_ref = jax.grad(lambda p: jnp.sum(moe_apply(p, x, cfg)[0]**2))(params)
+    g_ref = jax.grad(lambda p: jnp.sum(moe_apply(p, x, cfg)[0] ** 2))(params)
     with use_rules(rules, mesh), mesh:
         g_ep = jax.jit(jax.grad(
-            lambda p: jnp.sum(moe_apply(p, x, cfg)[0]**2)))(params, )
+            lambda p: jnp.sum(moe_apply(p, x, cfg)[0] ** 2)))(params)
     for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_ep)):
         assert float(jnp.max(jnp.abs(a - b))) < 1e-3
-print("OK")
-""")
 
 
 def test_tp_shardmap_parity():
-    _run("""
-import jax, jax.numpy as jnp, numpy as np
-from repro.configs import get_smoke
-from repro.models import init_model, loss_fn
-from repro.distributed.sharding import use_rules
+    from repro.configs import get_smoke
+    from repro.models import init_model, loss_fn
+    from repro.distributed.sharding import use_rules
 
-rng = np.random.default_rng(0)
-cfg = get_smoke("llama3_8b").replace(tp_shardmap=True)
-params = init_model(cfg, jax.random.PRNGKey(0))
-tokens = jnp.asarray(rng.integers(1, cfg.vocab, (4, 64)), jnp.int32)
-batch = {"tokens": tokens, "labels": tokens}
-ref = loss_fn(params, batch, cfg)          # no mesh -> plain path
-mesh = jax.make_mesh((2, 4), ("data", "model"))
-rules = {"batch": ("data",), "heads": "model", "mlp": "model",
-         "vocab": "model", "seq": None, "embed": None, "kv_heads": None,
-         "head_dim": None, "layers": None, "expert_router": None}
-with use_rules(rules, mesh), mesh:
-    got = jax.jit(lambda p, b: loss_fn(p, b, cfg))(params, batch)
-assert abs(float(ref) - float(got)) < 1e-3, (ref, got)
-print("OK")
-""")
+    rng = np.random.default_rng(0)
+    cfg = get_smoke("llama3_8b").replace(tp_shardmap=True)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab, (4, 64)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    ref = loss_fn(params, batch, cfg)          # no mesh -> plain path
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rules = {"batch": ("data",), "heads": "model", "mlp": "model",
+             "vocab": "model", "seq": None, "embed": None, "kv_heads": None,
+             "head_dim": None, "layers": None, "expert_router": None}
+    with use_rules(rules, mesh), mesh:
+        got = jax.jit(lambda p, b: loss_fn(p, b, cfg))(params, batch)
+    assert abs(float(ref) - float(got)) < 1e-3, (ref, got)
 
 
 def test_fem_sharded_matvec():
-    _run("""
-import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import Mesh as JMesh
-from repro.fem import unit_cube_mesh, uniform_refine, build_elements, stiffness_matvec
-from repro.fem.parallel import shard_elements, make_sharded_matvec, AXIS
-from repro.core import DynamicLoadBalancer
+    from jax.sharding import Mesh as JMesh
+    from repro.fem import (unit_cube_mesh, uniform_refine, build_elements,
+                           stiffness_matvec)
+    from repro.fem.parallel import (AXIS, make_sharded_matvec,
+                                    shard_elements)
+    from repro.core import DynamicLoadBalancer
 
-m = unit_cube_mesh(2); uniform_refine(m, 2)
-el = build_elements(m.verts, m.tets)
-p = 8
-bal = DynamicLoadBalancer(p, "hsfc")
-parts = np.asarray(bal.balance(jnp.ones(m.n_tets),
-                               coords=jnp.asarray(m.barycenters())).parts)
-sel = shard_elements(el, parts, p)
-mesh = JMesh(np.array(jax.devices()).reshape(p), (AXIS,))
-mv, _ = make_sharded_matvec(sel, mesh, c=1.0)
-u = jnp.asarray(np.random.default_rng(0).random(m.n_verts).astype(np.float32))
-err = float(jnp.max(jnp.abs(mv(u) - stiffness_matvec(el, u, c=1.0))))
-assert err < 1e-4, err
-print("OK")
-""")
+    m = unit_cube_mesh(2)
+    uniform_refine(m, 2)
+    el = build_elements(m.verts, m.tets)
+    p = 8
+    bal = DynamicLoadBalancer(p, "hsfc")
+    parts = np.asarray(bal.balance(jnp.ones(m.n_tets),
+                                   coords=jnp.asarray(m.barycenters())).parts)
+    sel = shard_elements(el, parts, p)
+    mesh = JMesh(np.array(jax.devices()).reshape(p), (AXIS,))
+    mv, _ = make_sharded_matvec(sel, mesh, c=1.0)
+    u = jnp.asarray(
+        np.random.default_rng(0).random(m.n_verts).astype(np.float32))
+    err = float(jnp.max(jnp.abs(mv(u) - stiffness_matvec(el, u, c=1.0))))
+    assert err < 1e-4, err

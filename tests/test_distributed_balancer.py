@@ -1,0 +1,224 @@
+"""DistributedBalancer subsystem: parity vs the host pipeline, migration
+conservation, and SFC property tests (encode/decode roundtrip, box-map
+locality)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro import core
+from repro.core import DynamicLoadBalancer
+
+needs8 = pytest.mark.skipif(jax.device_count() < 8,
+                            reason="needs 8 placeholder devices")
+
+
+def _data(seed, n, int_weights=True):
+    """Integer-valued float32 weights keep every partial sum exact, so the
+    host cumsum and the device scan produce bit-identical prefix sums."""
+    rng = np.random.default_rng(seed)
+    coords = jnp.asarray(rng.random((n, 3)).astype(np.float32))
+    if int_weights:
+        w = jnp.asarray(rng.integers(1, 10, n).astype(np.float32))
+    else:
+        w = jnp.asarray(rng.random(n).astype(np.float32) + 0.01)
+    return coords, w
+
+
+# ---------------------------------------------------------------------------
+# parity: on-device pipeline == host pipeline
+# ---------------------------------------------------------------------------
+
+@needs8
+@pytest.mark.parametrize("method", ["hsfc", "msfc", "hsfc_zoltan"])
+def test_sharded_matches_host_parts(method):
+    from repro.distributed import DistributedBalancer
+    coords, w = _data(0, 5000)
+    p = 8
+    host = DynamicLoadBalancer(p, method, oneD="sorted").balance(
+        w, coords=coords)
+    dist = DistributedBalancer(p, method).balance(w, coords=coords)
+    assert (np.asarray(host.parts) == np.asarray(dist.parts)).all()
+    assert abs(host.info["imbalance"] - dist.info["imbalance"]) < 1e-6
+    np.testing.assert_allclose(host.info["part_weights"],
+                               dist.info["part_weights"], rtol=1e-6)
+
+
+@needs8
+def test_backend_sharded_via_core_api():
+    """core.DynamicLoadBalancer(backend='sharded') delegates correctly."""
+    coords, w = _data(1, 3000)
+    p = 8
+    host = DynamicLoadBalancer(p, "hsfc").balance(w, coords=coords)
+    shrd = DynamicLoadBalancer(p, "hsfc", backend="sharded").balance(
+        w, coords=coords)
+    assert shrd.info["backend"] == "sharded"
+    assert (np.asarray(host.parts) == np.asarray(shrd.parts)).all()
+    with pytest.raises(ValueError):
+        DynamicLoadBalancer(p, "rcb", backend="sharded").balance(
+            w, coords=coords)
+
+
+@needs8
+def test_sharded_incremental_migration_and_conservation():
+    from repro.distributed import DistributedBalancer
+    coords, w = _data(2, 4096)
+    p = 8
+    bal = DistributedBalancer(p, "hsfc")
+    r1 = bal.balance(w, coords=coords)
+    w2 = w.at[:256].set(w[:256] + 3.0)
+    r2 = bal.balance(w2, coords=coords, old_parts=r1.parts)
+    total = float(jnp.sum(w2))
+    # migration executor conserves total weight exactly (on-device check)
+    assert r2.info["mig_overflow"] == 0
+    assert r2.info["mig_items"] == 4096
+    assert abs(r2.info["mig_weight_in"] - r2.info["mig_weight_out"]) < 1e-3
+    assert abs(r2.info["mig_weight_in"] - total) < 1e-3
+    # moved + retained partition the total weight
+    assert abs(r2.info["TotalV"] + r2.info["retained"] - total) < 1e-3
+    # incrementality: a 6% weight bump must not shuffle most of the mesh
+    assert r2.info["TotalV"] / total < 0.2
+    # matches the host DLB step end-to-end (remap included; integer
+    # weights -> identical similarity matrices and greedy scores)
+    host = DynamicLoadBalancer(p, "hsfc", oneD="sorted")
+    h1 = host.balance(w, coords=coords)
+    h2 = host.balance(w2, coords=coords, old_parts=h1.parts)
+    assert abs(h2.info["imbalance"] - r2.info["imbalance"]) < 1e-6
+    assert abs(h2.info["TotalV"] - r2.info["TotalV"]) < 1e-3
+
+
+@needs8
+def test_migrate_items_delivers_each_item_once():
+    """Payload identity survives the all_to_all: every global item id
+    arrives exactly once, at the shard its dest says."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.distributed import migrate_items
+    from repro.distributed.sharding import shard_map
+
+    p, C = 8, 32
+    n = p * C
+    rng = np.random.default_rng(0)
+    dest = jnp.asarray(rng.integers(0, p, n).astype(np.int32))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    w = jnp.asarray(rng.integers(1, 5, n).astype(np.float32))
+    mesh = Mesh(np.array(jax.devices()), ("x",))
+
+    def local(ids_l, dest_l, w_l):
+        mig = migrate_items({"id": ids_l}, dest_l, w_l, "x", p)
+        return mig.payload["id"], mig.valid, mig.n_recv[None]
+
+    got_ids, got_valid, counts = shard_map(
+        local, mesh=mesh, in_specs=(P("x"),) * 3,
+        out_specs=(P("x"), P("x"), P("x")))(ids, dest, w)
+    got_ids = np.asarray(got_ids).reshape(p, -1)
+    got_valid = np.asarray(got_valid).reshape(p, -1)
+    counts = np.asarray(counts)
+    assert counts.sum() == n
+    seen = []
+    for shard in range(p):
+        ids_s = got_ids[shard][got_valid[shard]]
+        # every delivered item wanted to be on this shard
+        assert (np.asarray(dest)[ids_s] == shard).all()
+        seen.extend(ids_s.tolist())
+    assert sorted(seen) == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# SFC property tests (shim-driven sweeps)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 10))
+@settings(max_examples=20, deadline=None)
+def test_hilbert_roundtrip_any_bits(seed, bits):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.integers(0, 1 << bits, (128, 3)).astype(np.uint32))
+    assert (core.hilbert_decode(core.hilbert_encode(g, bits), bits) == g).all()
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 10))
+@settings(max_examples=20, deadline=None)
+def test_morton_roundtrip_any_bits(seed, bits):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.integers(0, 1 << bits, (128, 3)).astype(np.uint32))
+    assert (core.morton_decode(core.morton_encode(g, bits), bits) == g).all()
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=10, deadline=None)
+def test_uniform_box_map_better_locality(seed):
+    """The paper's PHG-vs-Zoltan claim: on an anisotropic domain the
+    uniform (aspect-preserving) box map yields a curve whose consecutive
+    points are spatially closer than the per-axis (Zoltan) map's."""
+    rng = np.random.default_rng(seed)
+    coords = jnp.asarray(
+        (rng.random((2000, 3)) * np.array([20.0, 1.0, 1.0])).astype(np.float32))
+    lo, hi = core.bounding_box(coords)
+
+    def mean_jump(uniform):
+        keys = core.sfc_keys(coords, lo, hi, curve="hilbert",
+                             uniform=uniform)
+        order = np.argsort(np.asarray(keys), kind="stable")
+        pts = np.asarray(coords)[order]
+        return np.linalg.norm(np.diff(pts, axis=0), axis=1).mean()
+
+    assert mean_jump(True) <= mean_jump(False) * 1.05
+
+
+@needs8
+def test_execute_migration_flag_skips_payload_shipment():
+    """execute_migration=False still yields plan-level volume metrics but
+    no all_to_all conservation scalars."""
+    from repro.distributed import DistributedBalancer
+    coords, w = _data(5, 2048)
+    bal = DistributedBalancer(8, "hsfc", execute_migration=False)
+    r1 = bal.balance(w, coords=coords)
+    r2 = bal.balance(w, coords=coords, old_parts=r1.parts)
+    assert "TotalV" in r2.info and "mig_weight_in" not in r2.info
+
+
+@needs8
+def test_reshard_elements_loop_reuses_balancer():
+    """One-call FEM reshard entry: a persistent balancer across repeated
+    calls reuses compiled pipelines, volumes conserved every time."""
+    from repro.distributed import DistributedBalancer
+    from repro.fem import unit_cube_mesh, uniform_refine, build_elements
+    from repro.fem.parallel import reshard_elements
+
+    m = unit_cube_mesh(2)
+    uniform_refine(m, 1)
+    p = 8
+    bal = DistributedBalancer(p, "hsfc")
+    for _ in range(2):
+        el = build_elements(m.verts, m.tets)
+        sel, res = reshard_elements(el, jnp.asarray(m.barycenters()), p,
+                                    balancer=bal)
+        assert abs(float(jnp.sum(sel.vol)) - 1.0) < 1e-5
+        uniform_refine(m, 1)
+    # both mesh sizes pad to the same power-of-two capacity: two balance
+    # calls, ONE compiled pipeline (the reuse the persistent balancer buys)
+    assert len(bal._compiled) == 1
+
+
+# ---------------------------------------------------------------------------
+# FEM wiring: adaptive loop with backend='sharded'
+# ---------------------------------------------------------------------------
+
+@needs8
+def test_adaptive_loop_sharded_backend():
+    from repro.fem import unit_cube_mesh, uniform_refine
+    from repro.fem.adapt import solve_helmholtz_adaptive
+
+    m = unit_cube_mesh(2)
+    uniform_refine(m, 1)
+    p = 8
+    res = solve_helmholtz_adaptive(m, p=p, max_steps=2, max_tets=20_000,
+                                   backend="sharded")
+    assert len(res.stats) == 2
+    assert res.stats[-1].imbalance < 1.2
+    # the refined mesh was re-sharded on device: (p, C, ...) packing with
+    # element volume conserved
+    assert res.sharded is not None
+    assert res.sharded.p == p
+    vol = float(jnp.sum(res.sharded.vol))
+    assert abs(vol - 1.0) < 1e-5           # unit cube

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.fem import (HelmholtzProblem, build_elements, cylinder_mesh,
                        load_vector, refine, coarsen, solve_dirichlet,

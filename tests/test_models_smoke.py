@@ -27,6 +27,7 @@ def _batch(cfg):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke(arch)

@@ -14,6 +14,7 @@ RNG = np.random.default_rng(0)
 B, S_PROMPT, N_NEW = 2, 32, 4
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_decode_matches_full_forward(arch):
     cfg = get_smoke(arch)
@@ -45,6 +46,7 @@ def test_decode_matches_full_forward(arch):
     assert max(errs) < 2e-2, errs
 
 
+@pytest.mark.slow
 def test_swa_ring_buffer_matches_full_cache():
     """SWA decode with ring cache (S=window) == decode with full cache."""
     cfg = get_smoke("h2o_danube3_4b").replace(window=16)

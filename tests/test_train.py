@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.configs import get_smoke
 from repro.data import (SyntheticCorpus, balanced_pack, greedy_pack,
@@ -54,12 +54,13 @@ def test_compressed_training_converges():
 def test_compressed_psum_accuracy():
     from repro.train import compressed_psum
     from jax.sharding import Mesh, PartitionSpec as P
+    from repro.distributed.sharding import shard_map
     if jax.device_count() < 2:
         pytest.skip("needs multiple devices")
     n_dev = jax.device_count()
     mesh = Mesh(np.array(jax.devices()), ("x",))
     x = jnp.asarray(RNG.standard_normal((n_dev, 128)).astype(np.float32))
-    f = jax.shard_map(lambda xs: compressed_psum(xs[0], "x")[None],
+    f = shard_map(lambda xs: compressed_psum(xs[0], "x")[None],
                       mesh=mesh, in_specs=P("x"), out_specs=P("x"))
     got = np.asarray(f(x))[0]
     want = np.asarray(x.sum(axis=0))
