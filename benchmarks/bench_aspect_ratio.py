@@ -8,7 +8,7 @@ cylinder-like domain of Example 3.1.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DynamicLoadBalancer, quality
+from repro.core import Balancer, BalanceSpec, quality
 from repro.fem import cylinder_mesh, uniform_refine
 
 P = 32
@@ -22,7 +22,7 @@ def run():
     adj = jnp.asarray(mesh.face_adjacency())
     rows = []
     for method in ["hsfc", "hsfc_zoltan", "msfc", "rcb"]:
-        bal = DynamicLoadBalancer(P, method)
+        bal = Balancer.from_spec(BalanceSpec(p=P, method=method))
         r = bal.balance(w, coords=coords)
         q = quality(r.parts, w, P, adjacency=adj)
         cut_frac = float(q.cut) / adj.shape[0]

@@ -6,15 +6,22 @@ with and without the Oliker--Biswas remap.  Paper claims: RTK/SFC are
 incremental (small migration); the remap removes the relabelling part of
 migration entirely.
 
-``--backend sharded`` runs the same drift sequence through the on-device
-pipeline (``repro.distributed.DistributedBalancer``): the whole DLB step
--- SFC keys, Algorithm-1 scan partition, distributed remap, all_to_all
-migration -- executes inside ONE jitted shard_map region over the
-simulated 8-device mesh, with a single host sync per balance step (the
-metric read-back).  Standalone:
+Every method runs through the declarative pipeline
+(``BalanceSpec`` -> ``Balancer``); ``--backend sharded`` resolves the
+same specs onto the on-device pipeline -- the whole DLB step (keys,
+1-D partition, distributed remap, all_to_all migration) inside ONE
+jitted shard_map region over the simulated 8-device mesh.  With
+``--oneD ksection`` the sharded path exercises the paper's histogram
+search instead of the all-gather sort.  Standalone:
 
     python -m benchmarks.bench_dlb --backend sharded
+    python -m benchmarks.bench_dlb --json BENCH_dlb.json
+
+``--json PATH`` writes a machine-readable record (per-method imbalance,
+migration fraction, wall time) so the perf trajectory is comparable
+across PRs.
 """
+import json
 import os
 
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
@@ -27,7 +34,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DynamicLoadBalancer, migration_volume
+from repro.core import Balancer, BalanceSpec
 
 P = 64
 N = 100_000
@@ -36,7 +43,7 @@ STEPS = 6
 SHARDED_METHODS = ("msfc", "hsfc")   # SFC family only on the device path
 
 
-def run(backend: str = "host"):
+def run(backend: str = "host", oneD: str = "sorted"):
     import jax
     rng = np.random.default_rng(0)
     coords = jnp.asarray(rng.random((N, 3)).astype(np.float32))
@@ -47,30 +54,43 @@ def run(backend: str = "host"):
         p = P
         methods = ["rtk", "msfc", "hsfc", "rcb"]
     rows = []
+    records = {}
     for method in methods:
         for use_remap in (True, False):
-            bal = DynamicLoadBalancer(p, method, use_remap=use_remap,
-                                      backend=backend)
+            spec = BalanceSpec(p=p, method=method, oneD=oneD,
+                               use_remap=use_remap, backend=backend)
+            bal = Balancer.from_spec(spec)
             old = None
             total_mig = 0.0
+            total_w = 0.0
             t_total = 0.0
+            last_imb = float("nan")
             for step in range(STEPS):
                 # moving refinement front: weights peak around a drifting x0
                 x0 = 0.15 * step
                 w = jnp.asarray(
                     (1.0 + 4.0 * np.exp(-40 * (np.asarray(coords[:, 0])
                                                - x0) ** 2)).astype(np.float32))
-                t0 = time.perf_counter()
-                r = bal.balance(w, coords=None if method == "rtk" else coords,
-                                old_parts=old)
-                t_total += time.perf_counter() - t0
+                res, t = bal.balance_timed(
+                    w, coords=None if method == "rtk" else coords,
+                    old_parts=old)
+                t_total += t["t_balance"]
+                last_imb = float(res.imbalance)
                 if old is not None:
-                    total_mig += r.info.get("TotalV", 0.0)
-                old = r.parts
+                    total_mig += float(res.total_v)
+                    total_w += float(jnp.sum(w))
+                old = res.parts
             tag = "remap" if use_remap else "noremap"
             rows.append((f"fig3.3/dlb/{method}/{tag}/{backend}/time",
                          t_total / STEPS * 1e6, total_mig))
-    return rows
+            records[f"{method}/{tag}"] = {
+                "imbalance": last_imb,
+                "migration_fraction": total_mig / max(total_w, 1e-30),
+                "wall_s_per_step": t_total / STEPS,
+            }
+    meta = {"bench": "dlb", "backend": backend, "oneD": oneD,
+            "p": p, "n": N, "steps": STEPS, "methods": records}
+    return rows, meta
 
 
 def main():
@@ -78,10 +98,19 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backend", default="host",
                     choices=["host", "sharded"])
+    ap.add_argument("--oneD", default="sorted",
+                    choices=["sorted", "ksection"])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a BENCH_dlb.json record to PATH")
     args = ap.parse_args()
+    rows, meta = run(backend=args.backend, oneD=args.oneD)
     print("name,us_per_call,derived")
-    for row in run(backend=args.backend):
+    for row in rows:
         print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(meta, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DynamicLoadBalancer
+from repro.core import Balancer, BalanceSpec
 from repro.core.graph_greedy import greedy_graph_partition
 
 P = 128
@@ -23,16 +23,17 @@ def run(sizes=(20_000, 80_000, 320_000), repeats=3):
             (rng.random((n, 3)) * np.array([10.0, 1.0, 1.0])).astype(np.float32))
         w = jnp.ones(n, jnp.float32)
         for method in ["rtk", "msfc", "hsfc", "hsfc_zoltan", "rcb"]:
-            bal = DynamicLoadBalancer(P, method)
+            bal = Balancer.from_spec(BalanceSpec(p=P, method=method))
             # warm up jit
             bal.balance(w, coords=None if method == "rtk" else coords)
             ts = []
+            r = None
             for _ in range(repeats):
-                t0 = time.perf_counter()
-                r = bal.balance(w, coords=None if method == "rtk" else coords)
-                ts.append(time.perf_counter() - t0)
+                r, t = bal.balance_timed(
+                    w, coords=None if method == "rtk" else coords)
+                ts.append(t["t_balance"])
             rows.append((f"fig3.2/partition_time/{method}/n{n}",
-                         min(ts) * 1e6, r.info["imbalance"]))
+                         min(ts) * 1e6, float(r.imbalance)))
     # graph greedy (ParMETIS stand-in) on the smallest size only (host BFS)
     n = sizes[0]
     coords = rng.random((n, 3))

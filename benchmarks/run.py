@@ -27,7 +27,7 @@ def main() -> None:
         "partition": lambda: bench_partition.run(
             sizes=(20_000, 40_000) if args.quick else (20_000, 80_000,
                                                        320_000)),
-        "dlb": bench_dlb.run,
+        "dlb": lambda: bench_dlb.run()[0],   # (rows, json_record)
         "adaptive_solve": lambda: bench_adaptive_solve.run(
             max_steps=3 if args.quick else 4),
         "parabolic": lambda: bench_parabolic.run(

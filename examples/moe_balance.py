@@ -11,7 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import ModelConfig
-from repro.models.moe import _dispatch_indices, init_moe, moe_apply
+from repro.models.moe import (_dispatch_indices, dispatch_quality,
+                              dispatch_spec, init_moe, moe_apply)
 
 
 def main():
@@ -23,12 +24,16 @@ def main():
         probs = np.exp(-skew * np.arange(e))
         probs /= probs.sum()
         items = rng.choice(e, size=s * k, p=probs)
+        # the routing decision scored with the shared core metric (the
+        # paper's imbalance on the token->expert 1-D partition)
+        q = dispatch_quality(jnp.asarray(items, jnp.int32), e)
         for cf in [1.0, 1.25, 2.0]:
             cap = max(int(cf * s * k / e), 1)
             slot, keep = _dispatch_indices(jnp.asarray(items, jnp.int32), e,
                                            cap)
             drop = 1.0 - float(np.asarray(keep).mean())
             print(f"  skew={skew:.1f} capacity_factor={cf:4.2f} "
+                  f"imbalance={float(q.imbalance):5.2f} "
                   f"-> drop_rate={drop:6.2%}")
 
     print("\n== aux loss tracks imbalance (Switch f*P) ==")
@@ -36,6 +41,7 @@ def main():
                       n_heads=4, n_kv_heads=4, d_ff=128, vocab=128,
                       n_experts=e, top_k=k, dtype="float32",
                       param_dtype="float32")
+    print(f"  dispatch as a BalanceSpec: {dispatch_spec(cfg).to_dict()}")
     params = init_moe(jax.random.PRNGKey(0), cfg)
     x = jnp.asarray(rng.standard_normal((4, s, 64)).astype(np.float32))
     out, aux = moe_apply(params, x, cfg)

@@ -19,7 +19,7 @@ import jax.numpy as jnp                           # noqa: E402
 import numpy as np                                # noqa: E402
 from jax.sharding import Mesh as JMesh            # noqa: E402
 
-from repro.core import DynamicLoadBalancer        # noqa: E402
+from repro.core import Balancer, BalanceSpec      # noqa: E402
 from repro.fem import (HelmholtzProblem, build_elements,  # noqa: E402
                        load_vector, refine, unit_cube_mesh, zz_estimate,
                        doerfler_mark)
@@ -33,7 +33,7 @@ def main():
     jmesh = JMesh(np.array(jax.devices()[:p]), (AXIS,))
     prob = HelmholtzProblem()
     mesh = unit_cube_mesh(3)
-    balancer = DynamicLoadBalancer(p, "hsfc")
+    balancer = Balancer.from_spec(BalanceSpec(p=p, method="hsfc"))
     old_parts = None
 
     for step in range(4):
@@ -65,8 +65,8 @@ def main():
         err = float(jnp.max(jnp.abs(u - prob.exact(verts))))
         print(f"step {step}: tets={mesh.n_tets:6d} on {p} devices  "
               f"cg_iters={int(sol.iters)} max_err={err:.3e} "
-              f"imbalance={r.info['imbalance']:.3f} "
-              f"migrated={r.info.get('TotalV', 0.0):.0f}")
+              f"imbalance={float(r.imbalance):.3f} "
+              f"migrated={float(r.total_v):.0f}")
 
         eta = np.asarray(zz_estimate(el, u))
         refine(mesh, doerfler_mark(eta, 0.4))

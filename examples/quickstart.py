@@ -2,24 +2,37 @@
 
 Adaptive FEM solve of the Helmholtz problem (paper Example 3.1) on a
 high-aspect-ratio cylinder, with dynamic load balancing each adaptive
-step, comparing the paper's partitioners.
+step, comparing the paper's partitioners -- each described by a
+declarative ``BalanceSpec`` and resolved by the ``Balancer`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Set ``QUICKSTART_SMOKE=1`` for the reduced CI configuration (2 methods,
+2 adaptive steps).
 """
+import os
+
 import numpy as np
 
-from repro.core import DynamicLoadBalancer
+from repro.core import Balancer, BalanceSpec
 from repro.fem import cylinder_mesh
 from repro.fem.adapt import solve_helmholtz_adaptive
 
+SMOKE = bool(os.environ.get("QUICKSTART_SMOKE"))
+
 
 def main():
+    methods = ["rtk", "hsfc"] if SMOKE else \
+        ["rtk", "hsfc", "msfc", "hsfc_zoltan", "rcb"]
+    max_steps = 2 if SMOKE else 5
+    max_tets = 6000 if SMOKE else 30000
     print("== paper Example 3.1 (reduced): adaptive Helmholtz on a "
           "cylinder, p=16 simulated processes ==")
-    for method in ["rtk", "hsfc", "msfc", "hsfc_zoltan", "rcb"]:
+    for method in methods:
         mesh = cylinder_mesh(8, 2, length=4.0, radius=0.5)
         res = solve_helmholtz_adaptive(
-            mesh, p=16, method=method, max_steps=5, max_tets=30000, tol=1e-6)
+            mesh, p=16, method=method, max_steps=max_steps,
+            max_tets=max_tets, tol=1e-6)
         last = res.stats[-1]
         t_bal = sum(s.t_balance for s in res.stats)
         mig = sum(s.migration_totalv for s in res.stats)
@@ -30,12 +43,23 @@ def main():
     print("\n== standalone DLB step on random points ==")
     import jax.numpy as jnp
     rng = np.random.default_rng(0)
-    coords = jnp.asarray(rng.random((50_000, 3)) * np.array([10.0, 1.0, 1.0]))
-    w = jnp.asarray((rng.random(50_000) + 0.1).astype(np.float32))
-    bal = DynamicLoadBalancer(128, "hsfc")
-    r = bal.balance(w, coords=coords)
-    print(f"hsfc on 50k pts -> 128 parts: imbalance={r.info['imbalance']:.4f} "
-          f"t={r.info['t_partition']*1e3:.0f}ms")
+    n = 10_000 if SMOKE else 50_000
+    coords = jnp.asarray(rng.random((n, 3)) * np.array([10.0, 1.0, 1.0]))
+    w = jnp.asarray((rng.random(n) + 0.1).astype(np.float32))
+
+    # declare the pipeline once; the spec is a plain-dict-serializable
+    # pytree, so configs/launchers can ship it around
+    spec = BalanceSpec(p=128, method="hsfc", oneD="sorted")
+    print(f"spec: {spec.to_dict()}")
+    bal = Balancer.from_spec(spec)
+    r, t = bal.balance_timed(w, coords=coords)
+    print(f"hsfc on {n//1000}k pts -> 128 parts: "
+          f"imbalance={float(r.imbalance):.4f} t={t['t_balance']*1e3:.0f}ms")
+
+    # the same declaration with the paper's k-section histogram search
+    rk = Balancer.from_spec(spec.replace(oneD="ksection")).balance(
+        w, coords=coords)
+    print(f"ksection variant: imbalance={float(rk.imbalance):.4f}")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,8 @@
 Decodes real tokens from a (small, randomly initialized) llama-family
 model with requests arriving continuously; every N steps the engine
 re-partitions live requests across simulated device groups using the
-paper's machinery (SFC-order 1-D partition + Oliker--Biswas remap) and
+paper's machinery, declared as a ``BalanceSpec`` (requests linearized by
+arrival id -> weighted 1-D partition -> Oliker--Biswas remap) and
 reports migration volume.
 
     PYTHONPATH=src python examples/serve_continuous.py
@@ -12,6 +13,7 @@ import numpy as np
 
 import jax
 from repro.configs import get_smoke
+from repro.core import BalanceSpec
 from repro.models import init_model
 from repro.serve import Request, ServeEngine
 
@@ -21,8 +23,9 @@ def main():
     cfg = get_smoke("llama3_8b").replace(n_layers=4, d_model=256, n_heads=8,
                                          n_kv_heads=4, head_dim=32, d_ff=512)
     params = init_model(cfg, jax.random.PRNGKey(0))
+    spec = BalanceSpec(p=4, method="linear", oneD="sorted")
     eng = ServeEngine(params, cfg, slots=8, max_seq=128, n_groups=4,
-                      rebalance_every=8)
+                      rebalance_every=8, balance_spec=spec)
 
     reqs = [Request(rid=i,
                     prompt=rng.integers(1, cfg.vocab, rng.integers(4, 24)),

@@ -1,8 +1,13 @@
 """Core load-balancing library: the paper's contribution.
 
-Public API re-exports.
+Public API re-exports.  The balancing pipeline is declarative:
+``BalanceSpec`` describes it, the stage registry provides per-backend
+implementations of ``keys -> partition1d -> remap -> migrate``, and
+``Balancer`` resolves a spec into a jit-compatible ``balance_fn``.
+``DynamicLoadBalancer`` is the deprecated eager shim.
 """
-from .balancer import BalanceResult, DynamicLoadBalancer
+from .balancer import (DynamicLoadBalancer, LegacyBalanceResult,
+                       _reset_deprecation_warning)
 from .metrics import imbalance, migration_volume, quality
 from .partition1d import (Partition1DResult, distributed_prefix_parts,
                           exclusive_scan_over_axis, ksection,
@@ -12,13 +17,21 @@ from .remap import apply_map, greedy_map, greedy_map_jnp, remap, similarity_matr
 from .rtree import RefinementForest, partition_dfs, rtk_partition_forest
 from .sfc import (bounding_box, box_map, hilbert_decode, hilbert_encode,
                   morton_decode, morton_encode, sfc_keys)
+from .spec import (BACKENDS, METHODS, ONED_SOLVERS, SFC_METHODS, STAGES,
+                   Balancer, BalanceResult, BalanceSpec, compute_cut,
+                   get_stage, register_stage, resolve_variants,
+                   stage_variants)
 
 __all__ = [
-    "BalanceResult", "DynamicLoadBalancer", "Partition1DResult",
-    "RefinementForest", "apply_map", "bounding_box", "box_map",
-    "distributed_prefix_parts", "exclusive_scan_over_axis", "greedy_map",
-    "greedy_map_jnp", "hilbert_decode", "hilbert_encode", "imbalance",
-    "ksection", "migration_volume", "morton_decode", "morton_encode",
-    "partition_dfs", "prefix_sum_parts", "quality", "rcb_partition", "remap",
-    "rtk_partition_forest", "similarity_matrix", "sfc_keys", "sorted_exact",
+    "BACKENDS", "METHODS", "ONED_SOLVERS", "SFC_METHODS", "STAGES",
+    "BalanceResult", "BalanceSpec", "Balancer", "DynamicLoadBalancer",
+    "LegacyBalanceResult", "Partition1DResult", "RefinementForest",
+    "apply_map", "bounding_box", "box_map", "compute_cut",
+    "distributed_prefix_parts", "exclusive_scan_over_axis", "get_stage",
+    "greedy_map", "greedy_map_jnp", "imbalance", "ksection",
+    "migration_volume", "morton_decode", "morton_encode", "partition_dfs",
+    "prefix_sum_parts", "quality", "rcb_partition", "register_stage",
+    "remap", "resolve_variants", "rtk_partition_forest",
+    "similarity_matrix", "sfc_keys", "sorted_exact", "stage_variants",
+    "hilbert_decode", "hilbert_encode",
 ]

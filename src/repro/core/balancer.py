@@ -1,148 +1,134 @@
-"""DynamicLoadBalancer -- the paper's DLB pipeline as a composable API.
+"""DEPRECATED shim: ``DynamicLoadBalancer`` over the ``BalanceSpec`` API.
 
-partition (RTK / HSFC / MSFC / RCB / graph) -> submesh->process remap
-(Oliker--Biswas) -> migration plan + metrics.  This is the object the FEM
-adaptive loop, the MoE dispatch layer, the sequence packer and the serving
-rebalancer all call into.
+The eager, host-blocking balancer object grew divergent host/sharded
+forks; the pipeline now lives in ``repro.core.spec`` (``BalanceSpec`` +
+stage registry + ``Balancer``).  This module keeps the old surface
+working: same constructor kwargs, same ``BalanceResult(parts, info)``
+with float metrics and wall-clock timings in the ``info`` dict.
 
-The balancer is *incremental by construction* for SFC/RTK methods (the
-paper's point): small mesh changes perturb prefix sums slightly, so part
-boundaries move slightly, so migration is small.  The remap step then
-relabels parts to processes to keep the retained fraction maximal.
+Migration guide (see ROADMAP.md for the full table)::
+
+    DynamicLoadBalancer(p, method, oneD=..., backend=...)
+        -> Balancer.from_spec(BalanceSpec(p=p, method=method,
+                                          oneD=..., backend=...))
+    result.info["imbalance"]  -> float(result.imbalance)
+    result.info["TotalV"]     -> float(result.total_v)
+    timings                   -> Balancer.balance_timed(...)
+
+New code should import from ``repro.core`` directly:
+``BalanceSpec``, ``Balancer``, ``BalanceResult``.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import metrics as _metrics
-from . import remap as _remap
-from .partition1d import ksection, sorted_exact
-from .rcb import rcb_partition
-from .rtree import partition_dfs
-from .sfc import bounding_box, sfc_keys
+from .spec import Balancer, BalanceSpec, compute_cut
+
+_DEPRECATION_WARNED = False
+
+
+def _warn_deprecated_once() -> None:
+    """Emit the legacy-API DeprecationWarning once per process."""
+    global _DEPRECATION_WARNED
+    if not _DEPRECATION_WARNED:
+        _DEPRECATION_WARNED = True
+        warnings.warn(
+            "DynamicLoadBalancer is deprecated; build a BalanceSpec and "
+            "use repro.core.Balancer.from_spec(spec) instead",
+            DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warning() -> None:
+    """Testing hook: allow the once-per-process warning to fire again."""
+    global _DEPRECATION_WARNED
+    _DEPRECATION_WARNED = False
 
 
 @dataclass
-class BalanceResult:
+class LegacyBalanceResult:
     parts: jax.Array                 # (n,) process id per item
     info: Dict                       # quality + migration metrics + timings
 
 
-class DynamicLoadBalancer:
-    """method in {'rtk', 'hsfc', 'msfc', 'hsfc_zoltan', 'rcb'}.
+# import-path compatibility: `from repro.core.balancer import BalanceResult`
+BalanceResult = LegacyBalanceResult
 
-    * rtk          prefix-sum refinement-tree (items must be in DFS order)
-    * hsfc / msfc  Hilbert / Morton SFC with PHG's uniform box map
-    * hsfc_zoltan  Hilbert with Zoltan's per-axis map (quality baseline)
-    * rcb          recursive coordinate bisection
+
+def legacy_info(spec: BalanceSpec, res, *, adjacency=None,
+                has_old: bool = False, t_balance: float = 0.0) -> Dict:
+    """Convert a pytree ``BalanceResult`` into the old ``info`` dict."""
+    info: Dict = {
+        "imbalance": float(res.imbalance),
+        "part_weights": np.asarray(res.part_weights),
+        "cut": (None if adjacency is None
+                else int(compute_cut(res.parts, adjacency))),
+        "t_partition": t_balance,
+        "t_remap": 0.0,
+    }
+    if spec.backend == "sharded":
+        info["backend"] = "sharded"
+    if has_old:
+        info.update(TotalV=float(res.total_v), MaxV=float(res.max_v),
+                    retained=float(res.retained))
+        if spec.use_remap:
+            info["remap_perm"] = res.remap_perm
+        if res.migration is not None:
+            info.update(
+                mig_weight_in=float(res.migration["weight_in"]),
+                mig_weight_out=float(res.migration["weight_out"]),
+                mig_items=int(res.migration["items"]),
+                mig_overflow=int(res.migration["overflow"]))
+    return info
+
+
+class DynamicLoadBalancer:
+    """DEPRECATED -- thin shim over ``repro.core.Balancer``.
+
+    method in {'rtk', 'hsfc', 'msfc', 'hsfc_zoltan', 'rcb'}; backend in
+    {'host', 'sharded'}.  Both 1-D solvers now run on both backends (the
+    sharded k-section landed with the spec registry), so the old
+    "backend='sharded' supports oneD='sorted'" restriction is gone.
     """
 
     def __init__(self, p: int, method: str = "hsfc", *,
                  oneD: str = "sorted", k: int = 8, iters: int = 12,
                  use_remap: bool = True, sfc_bits: int = 10,
                  backend: str = "host"):
-        """backend='host' runs the control-plane pipeline below;
-        backend='sharded' delegates the whole DLB step to
-        ``repro.distributed.DistributedBalancer`` -- one jitted shard_map
-        region over ``p`` devices (SFC methods only, needs
-        ``jax.device_count() >= p``)."""
-        if backend not in ("host", "sharded"):
-            raise ValueError(f"unknown backend {backend!r}")
-        if backend == "sharded" and oneD != "sorted":
-            # the device pipeline implements the sorted-exact 1-D stage
-            # only; k-section (and its k/iters knobs) is host-side
-            raise ValueError(
-                f"backend='sharded' supports oneD='sorted', got {oneD!r}")
-        self.p = p
-        self.method = method
-        self.oneD = oneD
-        self.k = k
-        self.iters = iters
-        self.use_remap = use_remap
-        self.sfc_bits = sfc_bits
+        _warn_deprecated_once()
+        self.spec = BalanceSpec(p=p, method=method, oneD=oneD, k=k,
+                                iters=iters, use_remap=use_remap,
+                                sfc_bits=sfc_bits, backend=backend)
+        # attribute compatibility
+        self.p, self.method, self.oneD = p, method, oneD
+        self.k, self.iters = k, iters
+        self.use_remap, self.sfc_bits = use_remap, sfc_bits
         self.backend = backend
-        self._sharded = None
+        self._balancer: Optional[Balancer] = None
 
-    def _sharded_balancer(self):
-        if self._sharded is None:
-            from ..distributed.balancer import DistributedBalancer
-            self._sharded = DistributedBalancer(
-                self.p, self.method, sfc_bits=self.sfc_bits,
-                use_remap=self.use_remap)
-        return self._sharded
+    def _get(self) -> Balancer:
+        # lazy so that spec/backend combinations with no registered stage
+        # raise at balance() time, as the old API did
+        if self._balancer is None:
+            self._balancer = Balancer.from_spec(self.spec)
+        return self._balancer
 
-    # -- partitioning ------------------------------------------------------
-    def _partition(self, coords: Optional[jax.Array], weights: jax.Array,
-                   dfs_weights: Optional[jax.Array]) -> jax.Array:
-        m = self.method
-        if m == "rtk":
-            assert dfs_weights is not None or weights is not None
-            w = weights if dfs_weights is None else dfs_weights
-            return partition_dfs(w, self.p)
-        if m == "rcb":
-            return rcb_partition(coords, weights, self.p)
-        curve = "morton" if m == "msfc" else "hilbert"
-        uniform = (m != "hsfc_zoltan")
-        lo, hi = bounding_box(coords)
-        keys = sfc_keys(coords, lo, hi, curve=curve, uniform=uniform,
-                        bits=self.sfc_bits)
-        if self.oneD == "sorted":
-            return sorted_exact(keys, weights, self.p).parts
-        return ksection(keys, weights, self.p, k=self.k, iters=self.iters).parts
-
-    # -- full DLB step -----------------------------------------------------
     def balance(self, weights: jax.Array, *,
                 coords: Optional[jax.Array] = None,
                 old_parts: Optional[jax.Array] = None,
-                adjacency: Optional[jax.Array] = None) -> BalanceResult:
-        if self.backend == "sharded":
-            return self._sharded_balancer().balance(
-                weights, coords=coords, old_parts=old_parts,
-                adjacency=adjacency)
-        n = int(weights.shape[0])
-        # pad to the next power-of-two bucket: adaptive meshes change size
-        # every step and unpadded shapes would trigger a jit recompile per
-        # step (zero-weight padding is invisible to every partitioner)
-        n_pad = 1 << max(int(np.ceil(np.log2(max(n, 2)))), 1)
-        padded = n_pad != n
-        if padded:
-            weights = jnp.concatenate(
-                [weights, jnp.zeros(n_pad - n, weights.dtype)])
-            if coords is not None:
-                tail = jnp.broadcast_to(coords[-1:], (n_pad - n, 3))
-                coords = jnp.concatenate([coords, tail])
-            if old_parts is not None:
-                old_parts = jnp.concatenate(
-                    [old_parts,
-                     jnp.zeros(n_pad - n, old_parts.dtype)])
-
+                adjacency: Optional[jax.Array] = None) -> LegacyBalanceResult:
+        bal = self._get()
         t0 = time.perf_counter()
-        parts = self._partition(coords, weights, None)
-        parts = jax.block_until_ready(parts)
-        t_part = time.perf_counter() - t0
-
-        info: Dict = {}
-        t1 = time.perf_counter()
-        if old_parts is not None and self.use_remap:
-            parts, perm = _remap.remap(old_parts, parts, weights, self.p)
-            parts = jax.block_until_ready(parts)
-            info["remap_perm"] = perm
-        t_remap = time.perf_counter() - t1
-
-        q = _metrics.quality(parts, weights, self.p, adjacency)
-        info.update(imbalance=float(q.imbalance),
-                    part_weights=np.asarray(q.part_weights),
-                    cut=None if q.cut is None else int(q.cut),
-                    t_partition=t_part, t_remap=t_remap)
-        if old_parts is not None:
-            mv = _metrics.migration_volume(old_parts, parts, weights, self.p)
-            info.update({k: float(v) for k, v in mv.items()})
-        if padded:
-            parts = parts[:n]
-        return BalanceResult(parts, info)
+        res = bal.balance(weights, coords=coords, old_parts=old_parts)
+        jax.block_until_ready(res.parts)
+        t = time.perf_counter() - t0
+        info = legacy_info(self.spec, res, adjacency=adjacency,
+                           has_old=old_parts is not None, t_balance=t)
+        if self.spec.backend == "sharded":
+            info["capacity"] = bal.capacity_for(int(weights.shape[0]))
+        return LegacyBalanceResult(res.parts, info)

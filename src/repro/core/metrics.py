@@ -22,19 +22,29 @@ class PartitionQuality(NamedTuple):
     cut: Optional[jax.Array]  # crossing links, if adjacency given
 
 
+def imbalance_of_part_weights(part_weights: jax.Array) -> jax.Array:
+    """max/mean part weight -- the single definition every backend uses."""
+    return jnp.max(part_weights) / jnp.maximum(jnp.mean(part_weights), 1e-30)
+
+
+def cut_links(parts: jax.Array, adjacency: jax.Array) -> jax.Array:
+    """Number of adjacency links crossing parts (communication proxy)."""
+    return jnp.sum(parts[adjacency[:, 0]] != parts[adjacency[:, 1]])
+
+
 def imbalance(parts: jax.Array, weights: jax.Array, p: int) -> jax.Array:
     pw = jax.ops.segment_sum(weights, parts, num_segments=p)
-    return jnp.max(pw) / jnp.maximum(jnp.mean(pw), 1e-30)
+    return imbalance_of_part_weights(pw)
 
 
 def quality(parts: jax.Array, weights: jax.Array, p: int,
             adjacency: Optional[jax.Array] = None) -> PartitionQuality:
     """adjacency: (m, 2) pairs of item ids that communicate (shared faces)."""
     pw = jax.ops.segment_sum(weights, parts, num_segments=p)
-    imb = jnp.max(pw) / jnp.maximum(jnp.mean(pw), 1e-30)
+    imb = imbalance_of_part_weights(pw)
     cut = None
     if adjacency is not None:
-        cut = jnp.sum(parts[adjacency[:, 0]] != parts[adjacency[:, 1]])
+        cut = cut_links(parts, adjacency)
     return PartitionQuality(imb, pw, cut)
 
 

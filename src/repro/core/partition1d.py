@@ -86,27 +86,21 @@ def _weight_below(keys: jax.Array, weights: jax.Array, cuts: jax.Array) -> jax.A
     return below
 
 
-@functools.partial(jax.jit, static_argnames=("p", "k", "iters"))
-def ksection(keys: jax.Array, weights: jax.Array, p: int, *,
-             k: int = 8, iters: int = 12,
-             lo: Optional[jax.Array] = None,
-             hi: Optional[jax.Array] = None) -> Partition1DResult:
-    """The paper's 1-D partitioner.
+def ksection_splitters(targets: jax.Array, blo: jax.Array, bhi: jax.Array,
+                       weight_below, *, k: int, iters: int) -> jax.Array:
+    """The k-section box-shrinking search, shared by every backend.
 
     Maintains a bounding box [blo_i, bhi_i] per splitter a_i (i=1..p-1).
     Each round: subdivide every box into k candidate cuts, measure
-    weight-below each cut (one fused histogram for all (p-1)*k candidates),
-    and shrink each box to the subinterval bracketing its target W*i/p.
-    ``iters`` rounds give k^-iters relative key-space precision.
+    weight-below each cut via ``weight_below(sorted_cuts)`` (one fused
+    histogram for all (p-1)*k candidates -- host-local, or a psum of
+    per-shard histograms on the sharded backend: the ONLY
+    backend-dependent piece, which is what keeps host and sharded
+    bit-exact by construction), and shrink each box to the subinterval
+    bracketing its target W*i/p.  ``iters`` rounds give k^-iters relative
+    key-space precision.
     """
-    fdt = jnp.float32
-    kf = keys.astype(fdt)
-    w = weights.astype(fdt)
-    total = jnp.sum(w)
-    targets = total * jnp.arange(1, p, dtype=fdt) / p      # (p-1,)
-
-    blo = jnp.full((p - 1,), jnp.min(kf) if lo is None else lo, dtype=fdt)
-    bhi = jnp.full((p - 1,), jnp.max(kf) + 1 if hi is None else hi, dtype=fdt)
+    fdt = targets.dtype
 
     def round_fn(_, state):
         blo, bhi = state
@@ -114,11 +108,11 @@ def ksection(keys: jax.Array, weights: jax.Array, p: int, *,
         frac = jnp.arange(1, k + 1, dtype=fdt) / (k + 1)
         cand = blo[:, None] + (bhi - blo)[:, None] * frac[None, :]
         flat = jnp.sort(cand.reshape(-1))
-        below_flat = _weight_below(kf, w, flat)
+        below_flat = weight_below(flat)
         # weight-below for each candidate in its original (box, slot) place
         # via searchsorted into the sorted flat array
         pos = jnp.searchsorted(flat, cand.reshape(-1), side="left")
-        below = below_flat[pos].reshape(p - 1, k)
+        below = below_flat[pos].reshape(targets.shape[0], k)
         # for splitter i: largest candidate with below <= target -> new lo;
         # smallest candidate with below > target -> new hi
         le = below <= targets[:, None]
@@ -130,8 +124,28 @@ def ksection(keys: jax.Array, weights: jax.Array, p: int, *,
         return jnp.maximum(new_lo, blo), jnp.minimum(new_hi, bhi)
 
     blo, bhi = jax.lax.fori_loop(0, iters, round_fn, (blo, bhi))
-    splitters = 0.5 * (blo + bhi)
-    splitters = jnp.sort(splitters)  # enforce monotonicity against fp noise
+    # enforce monotonicity against fp noise
+    return jnp.sort(0.5 * (blo + bhi))
+
+
+@functools.partial(jax.jit, static_argnames=("p", "k", "iters"))
+def ksection(keys: jax.Array, weights: jax.Array, p: int, *,
+             k: int = 8, iters: int = 12,
+             lo: Optional[jax.Array] = None,
+             hi: Optional[jax.Array] = None) -> Partition1DResult:
+    """The paper's 1-D partitioner (host/local form of the search)."""
+    fdt = jnp.float32
+    kf = keys.astype(fdt)
+    w = weights.astype(fdt)
+    total = jnp.sum(w)
+    targets = total * jnp.arange(1, p, dtype=fdt) / p      # (p-1,)
+
+    blo = jnp.full((p - 1,), jnp.min(kf) if lo is None else lo, dtype=fdt)
+    bhi = jnp.full((p - 1,), jnp.max(kf) + 1 if hi is None else hi, dtype=fdt)
+
+    splitters = ksection_splitters(
+        targets, blo, bhi, lambda cuts: _weight_below(kf, w, cuts),
+        k=k, iters=iters)
     parts = jnp.searchsorted(splitters, kf, side="right").astype(jnp.int32)
     part_weights = jax.ops.segment_sum(w, parts, num_segments=p)
     return Partition1DResult(parts, splitters, part_weights)

@@ -90,6 +90,18 @@ def greedy_map_jnp(S: jax.Array) -> jax.Array:
     return perm
 
 
+def guarded_greedy_perm(S: jax.Array) -> jax.Array:
+    """jit-friendly greedy assignment with the identity guard: keep
+    whichever of {greedy, no-relabel} retains more weight, so a remap
+    never *increases* migration (the guard PHG-style systems apply).
+    Shared by the host and sharded remap stages."""
+    p = S.shape[0]
+    perm = greedy_map_jnp(S)
+    retained_greedy = jnp.sum(S[perm, jnp.arange(p)])
+    return jnp.where(jnp.trace(S) > retained_greedy,
+                     jnp.arange(p, dtype=perm.dtype), perm)
+
+
 def apply_map(new_parts: jax.Array, perm: jax.Array) -> jax.Array:
     """Relabel new part ids with their assigned process ids."""
     return jnp.asarray(perm)[new_parts]

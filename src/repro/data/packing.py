@@ -20,7 +20,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import ksection, migration_volume, remap, sorted_exact
+from ..core import Balancer, BalanceSpec
 
 
 def attention_cost(lengths: np.ndarray, window: Optional[int] = None
@@ -32,26 +32,34 @@ def attention_cost(lengths: np.ndarray, window: Optional[int] = None
     return L + L * np.minimum(L, window) / 4096.0
 
 
+# one pipeline per (n_rows, oneD): documents linearized by arrival order
+# ('linear' keys), weighted 1-D partition, Oliker--Biswas remap
+_BALANCERS: Dict[Tuple[int, str], Balancer] = {}
+
+
+def _packer(n_rows: int, oneD: str) -> Balancer:
+    key = (n_rows, oneD)
+    if key not in _BALANCERS:
+        _BALANCERS[key] = Balancer.from_spec(BalanceSpec(
+            p=n_rows, method="linear", oneD=oneD, backend="host"))
+    return _BALANCERS[key]
+
+
 def balanced_pack(lengths: np.ndarray, n_rows: int, *,
                   cost: Optional[np.ndarray] = None,
                   old_rows: Optional[np.ndarray] = None,
                   method: str = "sorted") -> Tuple[np.ndarray, Dict]:
     """Assign each document to a row.  Returns (row ids, info)."""
     w = jnp.asarray(cost if cost is not None else lengths, jnp.float32)
-    keys = jnp.arange(len(lengths), dtype=jnp.uint32)   # arrival order
-    if method == "sorted":
-        parts = sorted_exact(keys, w, n_rows).parts
-    else:
-        parts = ksection(keys, w, n_rows).parts
+    oneD = "sorted" if method == "sorted" else "ksection"
+    old = None if old_rows is None else jnp.asarray(old_rows, jnp.int32)
+    res = _packer(n_rows, oneD).balance(w, old_parts=old)
     info: Dict = {}
     if old_rows is not None:
-        parts, perm = remap(jnp.asarray(old_rows), parts, w, n_rows)
-        mv = migration_volume(jnp.asarray(old_rows), parts, w, n_rows)
-        info.update({k: float(v) for k, v in mv.items()})
-    pw = np.bincount(np.asarray(parts), weights=np.asarray(w),
-                     minlength=n_rows)
-    info["imbalance"] = float(pw.max() / max(pw.mean(), 1e-9))
-    return np.asarray(parts), info
+        info.update(TotalV=float(res.total_v), MaxV=float(res.max_v),
+                    retained=float(res.retained))
+    info["imbalance"] = float(res.imbalance)
+    return np.asarray(res.parts), info
 
 
 def greedy_pack(lengths: np.ndarray, n_rows: int,

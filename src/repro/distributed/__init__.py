@@ -1,7 +1,11 @@
 """Distribution: shard_map compat shim, logical sharding rules, the
-on-device DLB pipeline (DistributedBalancer) and the migration executor."""
-from .balancer import AXIS as DLB_AXIS, DistributedBalancer
+sharded balancing stages for the ``BalanceSpec`` registry (``stages``),
+the legacy on-device DLB wrapper (``DistributedBalancer``) and the
+migration executor."""
+from . import stages  # registers the sharded stage variants on import
+from .balancer import DistributedBalancer
 from .migrate import MigrationResult, dispatch_slots, migrate_items
 from .sharding import (Boxed, DEFAULT_RULES, axes_tree, box, logical,
                        pspec_tree, set_rules, shard_map, spec_for,
                        stack_axes, unbox, use_rules)
+from .stages import AXIS as DLB_AXIS, build_balance_fn, build_mesh

@@ -1,252 +1,89 @@
-"""DistributedBalancer: the paper's full DLB step inside ONE jitted
-shard_map region over a device mesh.
+"""DEPRECATED shim: ``DistributedBalancer`` over the ``BalanceSpec`` API.
 
-Pipeline per balance step (all on device, no host sync until the caller
-reads the result):
+The on-device DLB pipeline now lives in the stage registry
+(``repro.distributed.stages``) composed by ``repro.core.Balancer`` with
+``BalanceSpec(backend='sharded')`` -- one jitted shard_map region: SFC
+keys (pmin/pmax box), 1-D partition ('sorted' scan or the paper's
+'ksection' histogram search), psum'd Oliker--Biswas remap, and the
+all_to_all migration executor.
 
-1. **SFC keys** -- global bounding box via ``pmin``/``pmax`` collectives,
-   then per-shard Hilbert/Morton key generation (Pallas kernel on TPU,
-   pure-jnp fallback elsewhere; paper section 2.2).
-2. **Curve order** -- a replicated global argsort of the gathered keys.
-   At simulation scale (one host, 8 placeholder devices) the all-gather
-   costs nothing; a multi-host deployment would substitute a sample sort
-   or the k-section histogram search (``core.partition1d.ksection``),
-   which is the ROADMAP's next step.
-3. **Algorithm 1** -- ``core.partition1d.distributed_prefix_parts``: two
-   local traversals + one scan collective assign every item its part
-   (paper section 2.3, eq. 1-2).
-4. **Oliker--Biswas remap** -- the similarity matrix is built as a psum
-   of per-shard contributions (each shard scores its own items, paper
-   section 2.4); the p x p greedy assignment is solved redundantly on
-   every shard with the jit-friendly ``greedy_map_jnp`` (identity-guarded
-   so a remap never increases migration).
-5. **Migration executor** -- ``distributed.migrate.migrate_items``
-   physically moves the item payload with one ``all_to_all`` and returns
-   on-device conservation / volume scalars.
+This class keeps the PR-1 surface working (host-facing ``balance`` with
+the float-metrics ``info`` dict, ``_compiled`` pipeline cache, ``mesh``
+attribute).  New code should use::
 
-The host wrapper pads inputs to ``p * C`` (C a power of two, so adaptive
-mesh growth reuses compiled executables), launches the jitted region, and
-performs a **single host sync** to materialize the metric scalars --
-matching the paper's claim that the whole DLB step is cheap enough to run
-every adaptive iteration.
-
-Single-device ``core.DynamicLoadBalancer`` and this class agree exactly
-(not just statistically): same box map, same keys, same stable sort, same
-prefix-sum floor -- the parity test pins them together at 1e-6.
+    spec = BalanceSpec(p=p, method='hsfc', backend='sharded')
+    Balancer.from_spec(spec).balance(w, coords=xyz, old_parts=old)
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+import time
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
 
-from ..core import partition1d as _p1d
-from ..core import sfc as _sfc
-from ..core.remap import greedy_map_jnp, similarity_matrix
-from .migrate import migrate_items
-from .sharding import shard_map
-
-AXIS = "dlb"
+from ..core.balancer import (LegacyBalanceResult, _warn_deprecated_once,
+                             legacy_info)
+from ..core.spec import Balancer, BalanceSpec, SFC_METHODS
+from .stages import AXIS  # noqa: F401  (re-exported; the mesh axis name)
 
 
 class DistributedBalancer:
-    """Sharded DLB over ``p`` devices.  method in {'hsfc', 'msfc',
-    'hsfc_zoltan'} (the SFC family; RTK/RCB stay host-driven).
+    """Sharded DLB over ``p`` devices (legacy wrapper).
 
-    Requires ``jax.device_count() >= p``; on CPU run the suite/bench with
-    ``--xla_force_host_platform_device_count=8``.
+    method in {'hsfc', 'msfc', 'hsfc_zoltan'} (the SFC family; RTK/RCB
+    stay host-driven).  Requires ``jax.device_count() >= p``; on CPU run
+    with ``--xla_force_host_platform_device_count=8``.
     """
 
     def __init__(self, p: int, method: str = "hsfc", *,
                  sfc_bits: int = 10, use_remap: bool = True,
                  use_pallas: Optional[bool] = None, devices=None,
-                 min_capacity: int = 64, execute_migration: bool = True):
-        if method not in ("hsfc", "msfc", "hsfc_zoltan"):
+                 min_capacity: int = 64, execute_migration: bool = True,
+                 oneD: str = "sorted"):
+        _warn_deprecated_once()
+        if method not in SFC_METHODS:
             raise ValueError(
-                f"DistributedBalancer supports SFC methods only, got {method!r}")
-        devices = list(devices) if devices is not None else jax.devices()
-        if len(devices) < p:
-            raise ValueError(
-                f"need >= {p} devices, have {len(devices)} "
-                "(set --xla_force_host_platform_device_count)")
-        self.p = p
-        self.method = method
-        self.curve = "morton" if method == "msfc" else "hilbert"
-        self.uniform = method != "hsfc_zoltan"
-        self.sfc_bits = sfc_bits
-        self.use_remap = use_remap
-        self.use_pallas = (jax.default_backend() == "tpu"
-                           if use_pallas is None else use_pallas)
+                f"DistributedBalancer supports SFC methods only, got "
+                f"{method!r}")
+        self.spec = BalanceSpec(
+            p=p, method=method, oneD=oneD, sfc_bits=sfc_bits,
+            use_remap=use_remap, backend="sharded",
+            min_capacity=min_capacity, execute_migration=execute_migration,
+            use_pallas=use_pallas)
+        self._inner = Balancer.from_spec(self.spec, devices=devices)
+        self.p, self.method = p, method
+        self.sfc_bits, self.use_remap = sfc_bits, use_remap
         self.min_capacity = min_capacity
-        # execute_migration=False skips the all_to_all payload shipment
-        # (and its conservation scalars) for callers that only need the
-        # plan + plan-level volume metrics -- one less collective per step
         self.execute_migration = execute_migration
-        self.mesh = Mesh(np.array(devices[:p]), (AXIS,))
-        self._compiled: Dict[Tuple[int, bool], callable] = {}
+        self.mesh = self._inner.mesh
 
-    # -- per-shard key generation (Pallas fast path, jnp fallback) ---------
-    def _local_keys(self, grid: jax.Array) -> jax.Array:
-        C = grid.shape[0]
-        if self.use_pallas and C % 8 == 0:
-            from ..kernels.sfc_keys import sfc_keys_pallas
-            g = grid.astype(jnp.int32)
-            keys = sfc_keys_pallas(g[:, 0], g[:, 1], g[:, 2],
-                                   curve=self.curve, bits=self.sfc_bits,
-                                   block=min(1024, C))
-            return keys.astype(jnp.uint32)
-        if self.curve == "hilbert":
-            return _sfc.hilbert_encode(grid, self.sfc_bits)
-        return _sfc.morton_encode(grid, self.sfc_bits)
+    @property
+    def _compiled(self):
+        """(C, has_old) combinations traced so far (held by the facade).
 
-    # -- the shard-local pipeline body -------------------------------------
-    def _local_pipeline(self, w, xyz, old, n, *, C: int, has_old: bool):
-        p = self.p
-        rank = jax.lax.axis_index(AXIS)
-        idx = rank * C + jnp.arange(C)
-        valid = idx < n
+        One entry per distinct compiled executable: jax.jit retraces per
+        capacity bucket, so len(_compiled) counts pipeline compilations.
+        """
+        return self._inner._compiled
 
-        # 1. keys under the global bounding box
-        lo = jax.lax.pmin(jnp.min(xyz, axis=0), AXIS)
-        hi = jax.lax.pmax(jnp.max(xyz, axis=0), AXIS)
-        grid = _sfc.box_map(xyz, lo, hi, uniform=self.uniform,
-                            bits=self.sfc_bits)
-        keys = self._local_keys(grid)
-
-        # 2. replicated global curve order (all-gather sort; see docstring)
-        keys_g = jax.lax.all_gather(keys, AXIS, tiled=True)
-        w_g = jax.lax.all_gather(w, AXIS, tiled=True)
-        order = jnp.argsort(keys_g, stable=True)
-
-        # 3. Algorithm 1 on the curve-ordered slices (one scan collective)
-        w_sorted_local = jax.lax.dynamic_slice(w_g[order], (rank * C,), (C,))
-        parts_sorted = _p1d.distributed_prefix_parts(w_sorted_local, p, AXIS)
-        parts_sorted_g = jax.lax.all_gather(parts_sorted, AXIS, tiled=True)
-        parts_g = jnp.zeros_like(parts_sorted_g).at[order].set(parts_sorted_g)
-        new_local = jax.lax.dynamic_slice(parts_g, (rank * C,), (C,))
-
-        aux = {}
-        if has_old:
-            # 4. distributed similarity + redundant greedy solve
-            S = jax.lax.psum(
-                similarity_matrix(old, new_local, w, p, p), AXIS)
-            perm = greedy_map_jnp(S)
-            retained_greedy = jnp.sum(S[perm, jnp.arange(p)])
-            perm = jnp.where(jnp.trace(S) > retained_greedy,
-                             jnp.arange(p, dtype=perm.dtype), perm)
-            if self.use_remap:
-                new_local = perm[new_local]
-            aux["remap_perm"] = perm
-
-        # on-device quality metrics
-        pw = jax.lax.psum(
-            jax.ops.segment_sum(w, new_local, num_segments=p), AXIS)
-        aux["part_weights"] = pw
-        aux["imbalance"] = jnp.max(pw) / jnp.maximum(jnp.mean(pw), 1e-30)
-
-        if has_old:
-            moved = jnp.where((old != new_local) & valid, w, 0.0)
-            outgoing = jax.lax.psum(
-                jax.ops.segment_sum(moved, old, num_segments=p), AXIS)
-            incoming = jax.lax.psum(
-                jax.ops.segment_sum(moved, new_local, num_segments=p), AXIS)
-            aux["TotalV"] = jnp.sum(outgoing)
-            aux["MaxV"] = jnp.maximum(jnp.max(outgoing), jnp.max(incoming))
-            aux["retained"] = jax.lax.psum(
-                jnp.sum(jnp.where((old == new_local) & valid, w, 0.0)), AXIS)
-            if self.execute_migration:
-                # 5. migration executor: ship the weight payload old ->
-                # new owner and check conservation entirely on device
-                mig = migrate_items({"w": w}, new_local, w, AXIS, p,
-                                    valid=valid)
-                aux["mig_weight_in"] = jax.lax.psum(
-                    jnp.sum(mig.weights), AXIS)
-                aux["mig_weight_out"] = jax.lax.psum(
-                    jnp.sum(jnp.where(valid, w, 0.0)), AXIS)
-                aux["mig_items"] = jax.lax.psum(mig.n_recv, AXIS)
-                aux["mig_overflow"] = jax.lax.psum(mig.overflow, AXIS)
-        return new_local, aux
-
-    def _get_fn(self, C: int, has_old: bool):
-        key = (C, has_old)
-        if key not in self._compiled:
-            body = functools.partial(self._local_pipeline, C=C,
-                                     has_old=has_old)
-            specs = dict(mesh=self.mesh,
-                         in_specs=(P(AXIS), P(AXIS), P(AXIS), P()),
-                         out_specs=(P(AXIS), P()))
-            # the greedy-remap fori_loop defeats the static replication
-            # checker (its carry mixes replicated and sharded leaves), so
-            # opt out; the kwarg was renamed check_rep -> check_vma in
-            # newer JAX.
-            try:
-                shmapped = shard_map(body, check_rep=False, **specs)
-            except TypeError:
-                shmapped = shard_map(body, check_vma=False, **specs)
-            self._compiled[key] = jax.jit(shmapped)
-        return self._compiled[key]
-
-    # -- host-facing entry point -------------------------------------------
     def balance(self, weights: jax.Array, *,
                 coords: Optional[jax.Array] = None,
                 old_parts: Optional[jax.Array] = None,
-                adjacency=None):
+                adjacency=None) -> LegacyBalanceResult:
         """Drop-in for ``DynamicLoadBalancer.balance`` (SFC methods).
 
         ``adjacency`` is accepted for signature compatibility; the cut
         metric needs the host-side element graph and is not computed on
         the sharded path.
         """
-        from ..core.balancer import BalanceResult   # circular-safe at call
         if coords is None:
             raise ValueError("sharded balance requires coords (SFC methods)")
-        p = self.p
-        n = int(weights.shape[0])
-        per = -(-n // p)                            # ceil
-        C = self.min_capacity
-        while C < per:
-            C <<= 1
-        n_pad = p * C
-        w = jnp.asarray(weights, jnp.float32)
-        xyz = jnp.asarray(coords)
-        if n_pad != n:
-            w = jnp.concatenate([w, jnp.zeros(n_pad - n, w.dtype)])
-            tail = jnp.broadcast_to(xyz[-1:], (n_pad - n, 3))
-            xyz = jnp.concatenate([xyz, tail])
-        has_old = old_parts is not None
-        if has_old:
-            if int(old_parts.shape[0]) != n:
-                raise ValueError(
-                    f"old_parts has {old_parts.shape[0]} items, weights "
-                    f"{n}: after refinement, pass the inherited parts of "
-                    "the *current* mesh")
-            old = jnp.asarray(old_parts, jnp.int32)
-            old = jnp.concatenate(
-                [old, jnp.zeros(n_pad - n, jnp.int32)]) if n_pad != n else old
-        else:
-            old = jnp.zeros(n_pad, jnp.int32)
-
-        parts_pad, aux = self._get_fn(C, has_old)(
-            w, xyz, old, jnp.int32(n))
-        parts = parts_pad[:n]
-        # ONE host sync: materialize metric scalars together
-        aux = jax.block_until_ready(aux)
-        info = {"imbalance": float(aux["imbalance"]),
-                "part_weights": np.asarray(aux["part_weights"]),
-                "cut": None, "backend": "sharded", "capacity": C}
-        if has_old:
-            info.update(
-                TotalV=float(aux["TotalV"]), MaxV=float(aux["MaxV"]),
-                retained=float(aux["retained"]),
-                remap_perm=aux["remap_perm"])
-            if self.execute_migration:
-                info.update(
-                    mig_weight_in=float(aux["mig_weight_in"]),
-                    mig_weight_out=float(aux["mig_weight_out"]),
-                    mig_items=int(aux["mig_items"]),
-                    mig_overflow=int(aux["mig_overflow"]))
-        return BalanceResult(parts, info)
+        t0 = time.perf_counter()
+        res = self._inner.balance(weights, coords=coords,
+                                  old_parts=old_parts)
+        jax.block_until_ready(res.parts)
+        t = time.perf_counter() - t0
+        info = legacy_info(self.spec, res, has_old=old_parts is not None,
+                           t_balance=t)
+        info["capacity"] = self._inner.capacity_for(int(weights.shape[0]))
+        return LegacyBalanceResult(res.parts, info)

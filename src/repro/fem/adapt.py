@@ -5,7 +5,8 @@ The paper's computation model per adaptive step:
     solve -> estimate -> mark -> refine(/coarsen) -> **balance** -> repeat
 
 ``balance`` is a full DLB step (partition + Oliker--Biswas remap +
-migration accounting) via ``repro.core.DynamicLoadBalancer``.  The paper's
+migration accounting) via the declarative ``repro.core.Balancer`` resolved
+from a ``BalanceSpec``.  The paper's
 repartition trigger is used: rebalance only when the load imbalance
 exceeds a threshold, and the number of repartitionings is reported
 (paper Table 1).
@@ -25,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import DynamicLoadBalancer, imbalance
+from ..core import Balancer, BalanceSpec, imbalance
 from .assemble import build_elements, load_vector, mass_matvec
 from .estimate import doerfler_mark, threshold_coarsen_mark, zz_estimate
 from .mesh import Mesh
@@ -92,13 +93,16 @@ def solve_helmholtz_adaptive(mesh: Mesh, *, p: int = 16,
     the halo-exchange vertex sharding noted in ROADMAP).
     """
     prob = HelmholtzProblem()
-    balancer = DynamicLoadBalancer(p, method, backend=backend)
+    balancer = Balancer.from_spec(
+        BalanceSpec(p=p, method=method, backend=backend))
     result = AdaptiveResult()
     old_parts = None
 
     for step in range(max_steps):
         el = build_elements(mesh.verts, mesh.tets)
-        if backend == "sharded" and jax.device_count() >= p:
+        # (constructing the sharded balancer above already guaranteed
+        # jax.device_count() >= p)
+        if backend == "sharded":
             prev = mesh.leaf_payload.get("parts")
             if prev is not None and len(prev) == mesh.n_tets:
                 from jax.sharding import Mesh as _JMesh
@@ -150,10 +154,11 @@ def solve_helmholtz_adaptive(mesh: Mesh, *, p: int = 16,
             br = balancer.balance(w, coords=coords, old_parts=old)
             parts = br.parts
             result.n_repartitions += 1
-            bal_info = br.info
+            step_imb = float(br.imbalance)
+            step_mig = float(br.total_v)
         else:
             parts = jnp.asarray(inherited)
-            bal_info = {"imbalance": cur, "TotalV": 0.0}
+            step_imb, step_mig = cur, 0.0
         mesh.leaf_payload["parts"] = np.asarray(parts)
         t_bal = time.perf_counter() - t0
         old_parts = parts
@@ -162,8 +167,8 @@ def solve_helmholtz_adaptive(mesh: Mesh, *, p: int = 16,
             n_tets=mesh.n_tets, n_verts=mesh.n_verts, eta=float(jnp.sum(eta**2) ** 0.5),
             err_l2=err, cg_iters=int(sol.iters), t_solve=t_solve,
             t_estimate=t_est, t_refine=t_ref, t_balance=t_bal,
-            imbalance=float(bal_info["imbalance"]), repartitioned=repart,
-            migration_totalv=float(bal_info.get("TotalV", 0.0)))
+            imbalance=step_imb, repartitioned=repart,
+            migration_totalv=step_mig)
         result.stats.append(st)
         if verbose:
             print(f"[{step}] nt={st.n_tets:7d} err={err:.3e} eta={st.eta:.3e} "
@@ -185,7 +190,8 @@ def solve_parabolic_adaptive(mesh: Mesh, *, p: int = 16,
                              verbose: bool = False) -> AdaptiveResult:
     """Paper Example 3.2: backward Euler + refine/coarsen each step."""
     prob = ParabolicProblem()
-    balancer = DynamicLoadBalancer(p, method, backend=backend)
+    balancer = Balancer.from_spec(
+        BalanceSpec(p=p, method=method, backend=backend))
     result = AdaptiveResult()
     old_parts = None
 
@@ -247,7 +253,7 @@ def solve_parabolic_adaptive(mesh: Mesh, *, p: int = 16,
             eta=float((eta ** 2).sum() ** 0.5), err_l2=err,
             cg_iters=int(sol.iters), t_solve=t_solve, t_estimate=0.0,
             t_refine=t_ref, t_balance=t_bal,
-            imbalance=br.info["imbalance"], repartitioned=True)
+            imbalance=float(br.imbalance), repartitioned=True)
         result.stats.append(st)
         if verbose:
             print(f"[t={t_next:.3f}] nt={st.n_tets:6d} err={err:.3e} "

@@ -12,9 +12,10 @@ Two element-distribution paths:
                                move between shards with the migration
                                executor's single ``all_to_all`` (no host
                                loop); ``reshard_elements`` composes it
-                               with ``DistributedBalancer`` so the
-                               adaptive loop re-partitions AND re-shards
-                               after every refinement step on device.
+                               with the sharded ``Balancer`` pipeline so
+                               the adaptive loop re-partitions AND
+                               re-shards after every refinement step on
+                               device.
 
 JAX mapping: element arrays are laid out as (p, C, ...) -- one row per
 part, padded to the capacity C = max part size (capacity comes from the
@@ -125,22 +126,24 @@ def shard_elements_on_device(el: P1Elements, parts: jax.Array, p: int,
 def reshard_elements(el: P1Elements, coords: jax.Array, p: int, *,
                      mesh: Optional[JMesh] = None,
                      old_parts: Optional[jax.Array] = None,
-                     balancer=None):
+                     balancer=None, spec=None):
     """One full on-device DLB step for the FEM layer: partition + remap
-    via ``DistributedBalancer`` (one jitted shard_map region), then
-    element payload migration via ``all_to_all``.  Returns
-    (ShardedElements, BalanceResult).
+    inside one jitted shard_map region (``Balancer`` with
+    ``backend='sharded'``), then element payload migration via
+    ``all_to_all``.  Returns (ShardedElements, result).
 
     Convenience one-call entry for examples/library users.  In a loop,
-    pass a persistent ``balancer`` so its compiled pipelines are reused
-    (the ``balancer=None`` default builds a fresh one per call); the
-    adaptive driver, which balances and packs at different points of its
-    step, calls ``DynamicLoadBalancer(backend='sharded')`` and
-    ``shard_elements_on_device`` separately instead.
+    pass a persistent ``balancer`` (a ``repro.core.Balancer`` or the
+    legacy ``DistributedBalancer``) so its compiled pipelines are reused;
+    ``spec`` overrides the default ``BalanceSpec`` when no balancer is
+    given.  The adaptive driver, which balances and packs at different
+    points of its step, composes the stages itself instead.
     """
-    from ..distributed.balancer import DistributedBalancer
+    from ..core.spec import Balancer, BalanceSpec
     if balancer is None:
-        balancer = DistributedBalancer(p, "hsfc")
+        if spec is None:
+            spec = BalanceSpec(p=p, method="hsfc", backend="sharded")
+        balancer = Balancer.from_spec(spec)
     if mesh is None:
         mesh = JMesh(np.array(jax.devices()[:p]), (AXIS,))
     w = jnp.ones(el.tets.shape[0], jnp.float32)

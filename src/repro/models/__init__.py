@@ -1,3 +1,4 @@
 """LM substrate: composable model definitions for the 10 assigned archs."""
 from .config import ModelConfig
 from .model import hidden_fn, init_model, loss_fn
+from .moe import dispatch_quality, dispatch_spec

@@ -35,12 +35,36 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..core.metrics import quality as _partition_quality
+from ..core.spec import BalanceSpec
 from ..distributed.sharding import (Boxed, box, get_mesh, get_rules, logical,
                                     shard_map, spec_for)
 from .config import ModelConfig
 from .layers import _init_dense
 
 F32 = jnp.float32
+
+
+def dispatch_spec(cfg: ModelConfig) -> BalanceSpec:
+    """The token->expert dispatch as a ``BalanceSpec``.
+
+    Dispatch IS the paper's 1-D partition problem: items linearized by
+    expert id ('linear' order), unit weights, one interval per expert --
+    the same declarative description the mesh/serving balancers resolve.
+    ``_dispatch_indices`` below is its capacity-constrained fused kernel
+    (slot = Algorithm 1's exclusive prefix sum within each interval).
+    """
+    return BalanceSpec(p=cfg.n_experts, method="linear", oneD="sorted",
+                       use_remap=False, padding="none")
+
+
+def dispatch_quality(expert_idx: jax.Array, n_experts: int):
+    """Expert-load quality of a routing decision via the shared core
+    metrics: per-expert item counts and the paper's imbalance (max/mean).
+    jit-safe; use it to monitor routing collapse next to the aux loss."""
+    flat = expert_idx.reshape(-1).astype(jnp.int32)
+    w = jnp.ones_like(flat, jnp.float32)
+    return _partition_quality(flat, w, n_experts)
 
 
 def _ep_layout(cfg: ModelConfig) -> Tuple[int, int, int]:

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import DynamicLoadBalancer, migration_volume
+from ..core import Balancer, BalanceSpec
 from ..models import ModelConfig
 from .decode import decode_step, init_decode_state, prefill
 
@@ -45,11 +45,14 @@ class ServeEngine:
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_seq: int = 256, n_groups: int = 4,
-                 rebalance_every: int = 16, backend: str = "host"):
-        """backend='sharded' runs the KV-weighted group rebalancing as the
-        on-device pipeline (DistributedBalancer over ``n_groups`` devices:
-        partition + remap + migration accounting in one jitted shard_map
-        region) -- the call the multi-pod launcher makes."""
+                 rebalance_every: int = 16, backend: str = "host",
+                 balance_spec: Optional[BalanceSpec] = None):
+        """The rebalancer is declarative: requests linearized by arrival
+        id (``method='linear'`` -- the incremental order, like the SFC
+        curve) and split by the weighted 1-D partitioner.  Pass
+        ``balance_spec`` to override; ``backend='sharded'`` runs the
+        pipeline in one jitted shard_map region over ``n_groups`` devices
+        -- the call the multi-pod launcher makes."""
         self.params, self.cfg = params, cfg
         self.slots, self.max_seq = slots, max_seq
         self.n_groups = n_groups
@@ -59,8 +62,10 @@ class ServeEngine:
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
         self.step_count = 0
-        self.balancer = DynamicLoadBalancer(n_groups, "hsfc", oneD="sorted",
-                                            backend=backend)
+        if balance_spec is None:
+            balance_spec = BalanceSpec(p=n_groups, method="linear",
+                                       oneD="sorted", backend=backend)
+        self.balancer = Balancer.from_spec(balance_spec)
         self.migration_log: List[Dict] = []
         self._decode = jax.jit(
             lambda p, s, t: decode_step(p, s, t, cfg))
@@ -82,18 +87,18 @@ class ServeEngine:
         live = [(i, r) for i, r in enumerate(self.active) if r is not None]
         if len(live) < 2:
             return
-        # weight = KV footprint proxy: tokens generated so far + prompt
+        # weight = KV footprint proxy: tokens generated so far + prompt;
+        # linearized by arrival id (the 'linear' keys stage reads x)
         w = jnp.asarray([len(r.out) + len(r.prompt) for _, r in live],
                         jnp.float32)
         coords = jnp.stack([jnp.asarray([float(r.rid) for _, r in live]),
                             jnp.zeros(len(live)), jnp.zeros(len(live))], 1)
         old = jnp.asarray([r.group for _, r in live], jnp.int32)
         res = self.balancer.balance(w, coords=coords, old_parts=old)
-        mv = migration_volume(old, res.parts, w, self.n_groups)
         self.migration_log.append(
             {"step": self.step_count,
-             "TotalV": float(mv["TotalV"]),
-             "imbalance": res.info["imbalance"]})
+             "TotalV": float(res.total_v),
+             "imbalance": float(res.imbalance)})
         for (i, r), g in zip(live, np.asarray(res.parts)):
             r.group = int(g)
 

@@ -1,0 +1,218 @@
+"""BalanceSpec / stage-registry API: spec round-tripping, jit
+composability of ``balance_fn`` on both backends, pad-sentinel metric
+masking, registry error surfaces, and the legacy-shim deprecation
+contract."""
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Balancer, BalanceResult, BalanceSpec,
+                        DynamicLoadBalancer, get_stage, resolve_variants,
+                        stage_variants)
+from repro.core.balancer import _reset_deprecation_warning
+
+needs8 = pytest.mark.skipif(jax.device_count() < 8,
+                            reason="needs 8 placeholder devices")
+
+
+def _data(seed, n):
+    rng = np.random.default_rng(seed)
+    coords = jnp.asarray(rng.random((n, 3)).astype(np.float32))
+    w = jnp.asarray(rng.integers(1, 10, n).astype(np.float32))
+    return coords, w
+
+
+# ---------------------------------------------------------------------------
+# spec round-tripping / validation
+# ---------------------------------------------------------------------------
+
+def test_spec_roundtrips_via_plain_dict():
+    spec = BalanceSpec(p=16, method="msfc", oneD="ksection", k=4, iters=9,
+                       sfc_bits=8, use_remap=False, backend="host",
+                       padding="none", min_capacity=32,
+                       execute_migration=False)
+    d = spec.to_dict()
+    assert isinstance(d, dict) and d["method"] == "msfc"
+    # JSON-safe and lossless
+    assert BalanceSpec.from_dict(json.loads(json.dumps(d))) == spec
+    # replace() produces a distinct, valid spec
+    assert spec.replace(oneD="sorted").oneD == "sorted"
+    assert spec.oneD == "ksection"
+
+
+def test_spec_from_dict_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown BalanceSpec fields"):
+        BalanceSpec.from_dict({"p": 4, "fanciness": 11})
+
+
+@pytest.mark.parametrize("bad", [
+    dict(p=0), dict(p=4, method="metis"), dict(p=4, oneD="binary"),
+    dict(p=4, backend="tpu_pod"), dict(p=4, padding="modular"),
+])
+def test_spec_validates_fields(bad):
+    with pytest.raises(ValueError):
+        BalanceSpec(**bad)
+
+
+def test_spec_is_static_pytree_and_hashable():
+    spec = BalanceSpec(p=4)
+    leaves, treedef = jax.tree_util.tree_flatten(spec)
+    assert leaves == []                       # all-static: crosses jit free
+    assert jax.tree_util.tree_unflatten(treedef, leaves) == spec
+    assert hash(spec) == hash(BalanceSpec(p=4))
+
+
+def test_registry_reports_available_variants():
+    assert "sorted" in stage_variants("host", "partition1d")
+    assert "ksection" in stage_variants("sharded", "partition1d")
+    with pytest.raises(ValueError, match="available"):
+        get_stage("sharded", "partition1d", "rcb")
+    # direct methods skip the keys stage
+    assert resolve_variants(BalanceSpec(p=4, method="rtk"))["keys"] is None
+
+
+def test_sharded_backend_rejects_methods_without_stages():
+    with pytest.raises(ValueError):
+        Balancer.from_spec(BalanceSpec(p=2, method="rcb", backend="sharded"))
+
+
+# ---------------------------------------------------------------------------
+# jit composability + pad-sentinel masking (host)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("oneD", ["sorted", "ksection"])
+def test_host_balance_fn_jits_end_to_end(oneD):
+    coords, w = _data(0, 4096)
+    bal = Balancer.from_spec(BalanceSpec(p=8, method="hsfc", oneD=oneD))
+    r_eager = bal.balance_fn(w, coords, None)
+    r_jit = jax.jit(bal.balance_fn)(w, coords, None)
+    assert isinstance(r_jit, BalanceResult)
+    assert (np.asarray(r_jit.parts) == np.asarray(r_eager.parts)).all()
+    # with old_parts (remap + migration metrics) under jit too
+    r2 = jax.jit(bal.balance_fn)(w, coords, r_jit.parts)
+    assert float(r2.total_v) + float(r2.retained) == pytest.approx(
+        float(jnp.sum(w)), rel=1e-6)
+
+
+def test_padding_is_invisible_to_all_metrics():
+    """Non-power-of-two meshes: padded tail items (weight 0, sentinel old
+    part) must not skew remap similarity, part weights, or migration
+    volume -- the padded pipeline's numbers equal the unpadded ones."""
+    coords, w = _data(3, 5000)                  # 5000 pads to 8192
+    spec = BalanceSpec(p=8, method="hsfc")
+    padded = Balancer.from_spec(spec)
+    exact = Balancer.from_spec(spec.replace(padding="none"))
+    r0 = exact.balance(w, coords=coords)
+    rp = padded.balance(w, coords=coords, old_parts=r0.parts)
+    re = exact.balance(w, coords=coords, old_parts=r0.parts)
+    assert (np.asarray(rp.parts) == np.asarray(re.parts)).all()
+    np.testing.assert_array_equal(np.asarray(rp.part_weights),
+                                  np.asarray(re.part_weights))
+    assert float(rp.imbalance) == float(re.imbalance)
+    assert float(rp.total_v) == float(re.total_v)
+    assert float(rp.max_v) == float(re.max_v)
+    assert float(rp.retained) == float(re.retained)
+
+
+def test_linear_method_orders_by_arrival():
+    """'linear' = the serving/packing linearization: contiguous arrival
+    runs of near-equal weight."""
+    w = jnp.asarray(np.ones(64, np.float32))
+    res = Balancer.from_spec(
+        BalanceSpec(p=4, method="linear", padding="none")).balance(w)
+    parts = np.asarray(res.parts)
+    assert (np.diff(parts) >= 0).all()          # contiguous intervals
+    assert np.bincount(parts, minlength=4).tolist() == [16, 16, 16, 16]
+
+
+# ---------------------------------------------------------------------------
+# sharded backend
+# ---------------------------------------------------------------------------
+
+@needs8
+def test_sharded_balance_fn_jits_end_to_end():
+    coords, w = _data(1, 4096)
+    bal = Balancer.from_spec(
+        BalanceSpec(p=8, method="hsfc", backend="sharded"))
+    r_wrap = bal.balance(w, coords=coords)
+    fn = jax.jit(bal.balance_fn)
+    r_jit = fn(w, coords, None)                 # 4096 = 8 * 512 already
+    assert (np.asarray(r_jit.parts) == np.asarray(r_wrap.parts)).all()
+    r2 = fn(w, coords, r_jit.parts)
+    assert r2.migration is not None
+    assert int(r2.migration["overflow"]) == 0
+    assert float(r2.migration["weight_in"]) == pytest.approx(
+        float(jnp.sum(w)), rel=1e-6)
+
+
+@needs8
+def test_sharded_ksection_bit_exact_vs_host():
+    """The registry closes the backend asymmetry: oneD='ksection' runs
+    sharded, bit-exact against the host histogram search."""
+    for seed, n in ((0, 5000), (7, 4096), (11, 777)):
+        coords, w = _data(seed, n)
+        spec = BalanceSpec(p=8, method="hsfc", oneD="ksection")
+        host = Balancer.from_spec(spec).balance(w, coords=coords)
+        shrd = Balancer.from_spec(
+            spec.replace(backend="sharded")).balance(w, coords=coords)
+        assert (np.asarray(host.parts) == np.asarray(shrd.parts)).all()
+        np.testing.assert_array_equal(np.asarray(host.part_weights),
+                                      np.asarray(shrd.part_weights))
+
+
+# ---------------------------------------------------------------------------
+# legacy shim
+# ---------------------------------------------------------------------------
+
+def test_legacy_shim_warns_exactly_once():
+    _reset_deprecation_warning()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        DynamicLoadBalancer(4, "hsfc")
+        DynamicLoadBalancer(4, "msfc", oneD="ksection")   # no second warning
+    dep = [r for r in rec if issubclass(r.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "BalanceSpec" in str(dep[0].message)
+
+
+def test_legacy_shim_matches_new_api():
+    coords, w = _data(2, 3000)
+    _reset_deprecation_warning()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = DynamicLoadBalancer(8, "hsfc")
+    l1 = legacy.balance(w, coords=coords)
+    l2 = legacy.balance(w, coords=coords, old_parts=l1.parts)
+    new = Balancer.from_spec(BalanceSpec(p=8, method="hsfc"))
+    n1 = new.balance(w, coords=coords)
+    n2 = new.balance(w, coords=coords, old_parts=n1.parts)
+    assert (np.asarray(l2.parts) == np.asarray(n2.parts)).all()
+    assert l2.info["imbalance"] == pytest.approx(float(n2.imbalance))
+    assert l2.info["TotalV"] == pytest.approx(float(n2.total_v))
+    assert "t_partition" in l2.info            # timings stay host-side
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch speaks the same language
+# ---------------------------------------------------------------------------
+
+def test_moe_dispatch_quality_uses_core_metrics():
+    from repro.models import dispatch_quality, dispatch_spec
+    from repro.models.config import ModelConfig
+
+    idx = jnp.asarray(np.random.default_rng(0).integers(0, 8, (2, 64, 2)))
+    q = dispatch_quality(idx, 8)
+    assert q.part_weights.shape == (8,)
+    assert float(jnp.sum(q.part_weights)) == 2 * 64 * 2
+    assert float(q.imbalance) >= 1.0
+    cfg = ModelConfig(name="t", family="moe", vocab=128, d_model=32,
+                      n_layers=1, n_heads=2, n_kv_heads=2, d_ff=64,
+                      n_experts=8, top_k=2)
+    spec = dispatch_spec(cfg)
+    assert spec.p == 8 and spec.method == "linear"
+    # the dispatch description round-trips like any other spec
+    assert BalanceSpec.from_dict(spec.to_dict()) == spec

@@ -201,6 +201,49 @@ def test_reshard_elements_loop_reuses_balancer():
 
 
 # ---------------------------------------------------------------------------
+# BalanceSpec backend parity: the registry closes the oneD asymmetry
+# ---------------------------------------------------------------------------
+
+def test_spec_roundtrip_preserves_backend_pipeline():
+    """A sharded spec serializes to a plain dict and back without losing
+    any pipeline knob (what a multi-host launcher ships to workers)."""
+    from repro.core import BalanceSpec
+    spec = BalanceSpec(p=8, method="msfc", oneD="ksection", k=4, iters=10,
+                       backend="sharded", min_capacity=128,
+                       execute_migration=False)
+    clone = BalanceSpec.from_dict(spec.to_dict())
+    assert clone == spec and clone.backend == "sharded"
+
+
+@needs8
+def test_sharded_ksection_no_value_error_and_host_parity():
+    """oneD='ksection' + backend='sharded' used to be a ValueError; it now
+    runs the paper's histogram search on-device, bit-exact vs host
+    (integer weights -> every histogram psum is an exact sum)."""
+    from repro.core import Balancer, BalanceSpec
+    coords, w = _data(9, 5000)
+    p = 8
+    spec = BalanceSpec(p=p, method="hsfc", oneD="ksection")
+    host_bal = Balancer.from_spec(spec)
+    shrd_bal = Balancer.from_spec(spec.replace(backend="sharded"))
+    h1 = host_bal.balance(w, coords=coords)
+    s1 = shrd_bal.balance(w, coords=coords)
+    assert (np.asarray(h1.parts) == np.asarray(s1.parts)).all()
+    # incremental step with remap + migration metrics stays bit-exact
+    w2 = w.at[:512].set(w[:512] + 2.0)
+    h2 = host_bal.balance(w2, coords=coords, old_parts=h1.parts)
+    s2 = shrd_bal.balance(w2, coords=coords, old_parts=s1.parts)
+    assert (np.asarray(h2.parts) == np.asarray(s2.parts)).all()
+    assert float(h2.total_v) == float(s2.total_v)
+    assert float(h2.retained) == float(s2.retained)
+    # legacy surface: the old restriction is gone end-to-end
+    legacy = DynamicLoadBalancer(p, "hsfc", oneD="ksection",
+                                 backend="sharded")
+    lr = legacy.balance(w, coords=coords)
+    assert (np.asarray(lr.parts) == np.asarray(h1.parts)).all()
+
+
+# ---------------------------------------------------------------------------
 # FEM wiring: adaptive loop with backend='sharded'
 # ---------------------------------------------------------------------------
 
