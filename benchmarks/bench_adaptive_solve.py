@@ -1,21 +1,46 @@
 """Paper Fig 3.4/3.5 + Table 1: adaptive Helmholtz (Example 3.1) --
 solve time, per-step time, total time and repartition count per method.
-"""
-import numpy as np
 
-from repro.fem import cylinder_mesh
-from repro.fem.adapt import solve_helmholtz_adaptive
+Runs through the declarative ``AdaptSpec`` -> ``AdaptiveSession``
+pipeline; ``--backend sharded`` resolves the balance stage onto the
+on-device pipeline + element-payload migration.  Standalone:
+
+    python -m benchmarks.bench_adaptive_solve --json BENCH_helmholtz.json
+    python -m benchmarks.bench_adaptive_solve --backend sharded
+
+``--json PATH`` writes a machine-readable record with the full per-step
+``StepStats`` (sizes, error, eta, CG iterations, stage timings,
+imbalance, migration volume) per method, so the perf trajectory is
+comparable across PRs -- the same contract as ``bench_dlb --json``.
+"""
+import dataclasses
+import json
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    # must be set before the first jax import for --backend sharded runs
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8").strip()
+
+from repro.core import BalanceSpec
+from repro.fem import AdaptSpec, AdaptiveSession, cylinder_mesh
 
 METHODS = ["rtk", "msfc", "hsfc", "hsfc_zoltan", "rcb"]
 
 
-def run(max_steps=4, max_tets=15000):
+def run(max_steps=4, max_tets=15000, p=16, backend="host", methods=None):
+    if backend == "sharded":
+        import jax
+        p = min(p, jax.device_count())
+    methods = METHODS if methods is None else methods
     rows = []
-    for method in METHODS:
+    records = {}
+    for method in methods:
         mesh = cylinder_mesh(6, 2, length=3.0, radius=0.5)
-        res = solve_helmholtz_adaptive(mesh, p=16, method=method,
-                                       max_steps=max_steps,
-                                       max_tets=max_tets, tol=1e-6)
+        spec = AdaptSpec(problem="helmholtz", max_steps=max_steps,
+                         max_tets=max_tets, tol=1e-6, backend=backend,
+                         balance=BalanceSpec(p=p, method=method))
+        res = AdaptiveSession(spec).run(mesh)
         t_sol = sum(s.t_solve for s in res.stats)
         t_bal = sum(s.t_balance for s in res.stats)
         t_step = t_sol + t_bal + sum(s.t_refine + s.t_estimate
@@ -28,4 +53,40 @@ def run(max_steps=4, max_tets=15000):
         rows.append((f"fig3.5/step_time/{method}",
                      t_step / len(res.stats) * 1e6,
                      res.stats[-1].n_tets))
-    return rows
+        records[method] = {
+            "n_repartitions": res.n_repartitions,
+            "steps": [dataclasses.asdict(s) for s in res.stats],
+        }
+    meta = {"bench": "adaptive_solve", "example": "3.1-helmholtz",
+            "backend": backend, "p": p, "max_steps": max_steps,
+            "max_tets": max_tets, "methods": records}
+    return rows, meta
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="host",
+                    choices=["host", "sharded"])
+    ap.add_argument("--max-steps", type=int, default=4)
+    ap.add_argument("--max-tets", type=int, default=15000)
+    ap.add_argument("--p", type=int, default=16)
+    ap.add_argument("--methods", default=None,
+                    help="comma-separated subset of " + ",".join(METHODS))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a machine-readable per-step record to PATH")
+    args = ap.parse_args()
+    methods = args.methods.split(",") if args.methods else None
+    rows, meta = run(max_steps=args.max_steps, max_tets=args.max_tets,
+                     p=args.p, backend=args.backend, methods=methods)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(meta, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

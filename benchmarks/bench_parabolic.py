@@ -1,20 +1,46 @@
 """Paper Tables 2-3 (Example 3.2): parabolic moving peak, refine+coarsen
-per step; per-method TAL/DLB/SOL/STP averages."""
-import numpy as np
+per step; per-method TAL/DLB/SOL/STP averages.
 
-from repro.fem import unit_cube_mesh
-from repro.fem.adapt import solve_parabolic_adaptive
+Runs through the declarative ``AdaptSpec`` -> ``AdaptiveSession``
+pipeline (the previous step's partition is threaded into every balance
+call, so the remap/migration numbers are live); ``--backend sharded``
+resolves the balance stage onto the on-device pipeline.  Standalone:
+
+    python -m benchmarks.bench_parabolic --json BENCH_parabolic.json
+    python -m benchmarks.bench_parabolic --backend sharded
+
+``--json PATH`` writes a machine-readable record with the full per-step
+``StepStats`` per method -- the same contract as ``bench_dlb --json``.
+"""
+import dataclasses
+import json
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    # must be set before the first jax import for --backend sharded runs
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8").strip()
+
+from repro.core import BalanceSpec
+from repro.fem import AdaptSpec, AdaptiveSession, unit_cube_mesh
 
 METHODS = ["hsfc", "msfc", "rtk", "rcb"]
 
 
-def run(n_steps=3, max_tets=12000):
+def run(n_steps=3, max_tets=12000, p=16, backend="host", methods=None):
+    if backend == "sharded":
+        import jax
+        p = min(p, jax.device_count())
+    methods = METHODS if methods is None else methods
     rows = []
-    for method in METHODS:
+    records = {}
+    for method in methods:
         mesh = unit_cube_mesh(3)
-        res = solve_parabolic_adaptive(mesh, p=16, method=method, dt=0.02,
-                                       n_steps=n_steps, max_tets=max_tets,
-                                       tol=1e-6)
+        spec = AdaptSpec.for_problem(
+            "parabolic", dt=0.02, n_steps=n_steps, max_tets=max_tets,
+            tol=1e-6, backend=backend,
+            balance=BalanceSpec(p=p, method=method))
+        res = AdaptiveSession(spec).run(mesh)
         n = len(res.stats)
         t_dlb = sum(s.t_balance for s in res.stats) / n
         t_sol = sum(s.t_solve for s in res.stats) / n
@@ -25,4 +51,40 @@ def run(n_steps=3, max_tets=12000):
                      res.stats[-1].err_l2))
         rows.append((f"tbl2/STP/{method}", t_stp * 1e6,
                      res.stats[-1].n_tets))
-    return rows
+        records[method] = {
+            "n_repartitions": res.n_repartitions,
+            "steps": [dataclasses.asdict(s) for s in res.stats],
+        }
+    meta = {"bench": "parabolic", "example": "3.2-moving-peak",
+            "backend": backend, "p": p, "n_steps": n_steps,
+            "max_tets": max_tets, "dt": 0.02, "methods": records}
+    return rows, meta
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="host",
+                    choices=["host", "sharded"])
+    ap.add_argument("--n-steps", type=int, default=3)
+    ap.add_argument("--max-tets", type=int, default=12000)
+    ap.add_argument("--p", type=int, default=16)
+    ap.add_argument("--methods", default=None,
+                    help="comma-separated subset of " + ",".join(METHODS))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a machine-readable per-step record to PATH")
+    args = ap.parse_args()
+    methods = args.methods.split(",") if args.methods else None
+    rows, meta = run(n_steps=args.n_steps, max_tets=args.max_tets,
+                     p=args.p, backend=args.backend, methods=methods)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(meta, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

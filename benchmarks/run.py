@@ -27,11 +27,12 @@ def main() -> None:
         "partition": lambda: bench_partition.run(
             sizes=(20_000, 40_000) if args.quick else (20_000, 80_000,
                                                        320_000)),
-        "dlb": lambda: bench_dlb.run()[0],   # (rows, json_record)
+        # [0]: these run() return (rows, json_record)
+        "dlb": lambda: bench_dlb.run()[0],
         "adaptive_solve": lambda: bench_adaptive_solve.run(
-            max_steps=3 if args.quick else 4),
+            max_steps=3 if args.quick else 4)[0],
         "parabolic": lambda: bench_parabolic.run(
-            n_steps=2 if args.quick else 3),
+            n_steps=2 if args.quick else 3)[0],
         "aspect_ratio": bench_aspect_ratio.run,
         "beyond": bench_beyond.run,
     }

@@ -1,9 +1,14 @@
 """Distributed adaptive FEM on multiple (placeholder) devices.
 
-Runs the paper's compute model for real: the balancer partitions elements,
-shard_map executes the element-local work per device with one psum for the
-shared-vertex reduction, and PCG solves the system -- then the mesh
-refines and the partition is rebalanced with minimal migration.
+Runs the paper's compute model for real through the declarative session
+API: an ``AdaptSpec`` with ``backend='sharded'`` resolves the balance
+stage onto the on-device pipeline (one jitted shard_map region) and
+re-packs the refined mesh's element payloads across devices with the
+migration executor's ``all_to_all`` after every repartition.  The
+resulting ``(p, C, ...)`` packing then drives the sharded matrix-free
+operator (element-local work per device + one psum for the shared-vertex
+reduction) in a distributed PCG solve, cross-checked against the
+session's single-device solution.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/parallel_fem.py
@@ -17,60 +22,63 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 import jax                                        # noqa: E402
 import jax.numpy as jnp                           # noqa: E402
 import numpy as np                                # noqa: E402
-from jax.sharding import Mesh as JMesh            # noqa: E402
 
-from repro.core import Balancer, BalanceSpec      # noqa: E402
-from repro.fem import (HelmholtzProblem, build_elements,  # noqa: E402
-                       load_vector, refine, unit_cube_mesh, zz_estimate,
-                       doerfler_mark)
-from repro.fem.parallel import (AXIS, make_sharded_matvec,  # noqa: E402
-                                shard_elements, sharded_diagonal)
+from repro.core import BalanceSpec                # noqa: E402
+from repro.fem import (AdaptSpec, AdaptiveSession,  # noqa: E402
+                       HelmholtzProblem, build_elements, load_vector,
+                       unit_cube_mesh)
+from repro.fem.parallel import (device_mesh, make_sharded_matvec,  # noqa: E402
+                                sharded_diagonal)
 from repro.fem.solve import pcg                   # noqa: E402
 
 
 def main():
     p = min(8, jax.device_count())
-    jmesh = JMesh(np.array(jax.devices()[:p]), (AXIS,))
+
+    # the whole adaptive loop as one declarative spec: Dörfler marking,
+    # repartition every step, sharded DLB + element migration on device
+    spec = AdaptSpec(problem="helmholtz", theta=0.4, trigger="always",
+                     backend="sharded", max_steps=4, max_tets=8000,
+                     tol=1e-6, balance=BalanceSpec(p=p, method="hsfc"))
+
+    def on_step(stats, state):
+        print(f"step {state.step}: tets={stats.n_tets:6d} on {p} devices  "
+              f"cg_iters={stats.cg_iters} err={stats.err_l2:.3e} "
+              f"imbalance={stats.imbalance:.3f} "
+              f"migrated={stats.migration_totalv:.0f} "
+              f"retained={stats.migration_retained:.0f}")
+
+    res = AdaptiveSession(spec, on_step=on_step).run(unit_cube_mesh(3))
+
+    # -- distributed solve on the final on-device packing -------------------
+    # res.sharded is the (p, C, ...) element distribution the balance stage
+    # migrated onto the device mesh; build the sharded operator from it and
+    # solve the same Helmholtz system with PCG, all communication being one
+    # psum per matvec.
     prob = HelmholtzProblem()
-    mesh = unit_cube_mesh(3)
-    balancer = Balancer.from_spec(BalanceSpec(p=p, method="hsfc"))
-    old_parts = None
+    mesh, sel = res.mesh, res.sharded
+    jmesh = device_mesh(p)
+    matvec, _ = make_sharded_matvec(sel, jmesh, c=prob.c)
+    diag = sharded_diagonal(sel, jmesh, prob.c)
 
-    for step in range(4):
-        el = build_elements(mesh.verts, mesh.tets)
-        verts = jnp.asarray(mesh.verts)
-        w = jnp.ones(mesh.n_tets, jnp.float32)
-        r = balancer.balance(w, coords=jnp.asarray(mesh.barycenters()),
-                             old_parts=old_parts)
-        parts = np.asarray(r.parts)
-        mesh.leaf_payload["parts"] = parts
-        old_parts = None  # re-derive after refinement via payload
+    el = build_elements(mesh.verts, mesh.tets)
+    verts = jnp.asarray(mesh.verts)
+    free = np.ones(mesh.n_verts, np.float32)
+    free[mesh.boundary_vertices()] = 0.0
+    free = jnp.asarray(free)
+    g = prob.exact(verts)
+    rhs = load_vector(el, verts, prob.f)
+    lift = matvec(jnp.where(free > 0, 0.0, g))
+    b = jnp.where(free > 0, rhs - lift, 0.0)
+    mv_free = lambda u: jnp.where(free > 0, matvec(u * free), u)
+    sol = pcg(mv_free, b, jnp.where(free > 0, diag, 1.0),
+              jnp.zeros_like(b), tol=1e-6, maxiter=2000)
+    u = sol.x + jnp.where(free > 0, 0.0, g)
 
-        sel = shard_elements(el, parts, p)
-        matvec, _ = make_sharded_matvec(sel, jmesh, c=prob.c)
-        diag = sharded_diagonal(sel, jmesh, prob.c)
-
-        bv = mesh.boundary_vertices()
-        free = np.ones(mesh.n_verts, np.float32)
-        free[bv] = 0.0
-        free = jnp.asarray(free)
-        g = prob.exact(verts)
-        rhs = load_vector(el, verts, prob.f)
-        lift = matvec(jnp.where(free > 0, 0.0, g))
-        b = jnp.where(free > 0, rhs - lift, 0.0)
-        mv_free = lambda u: jnp.where(free > 0, matvec(u * free), u)
-        sol = pcg(mv_free, b, jnp.where(free > 0, diag, 1.0),
-                  jnp.zeros_like(b), tol=1e-6, maxiter=2000)
-        u = sol.x + jnp.where(free > 0, 0.0, g)
-        err = float(jnp.max(jnp.abs(u - prob.exact(verts))))
-        print(f"step {step}: tets={mesh.n_tets:6d} on {p} devices  "
-              f"cg_iters={int(sol.iters)} max_err={err:.3e} "
-              f"imbalance={float(r.imbalance):.3f} "
-              f"migrated={float(r.total_v):.0f}")
-
-        eta = np.asarray(zz_estimate(el, u))
-        refine(mesh, doerfler_mark(eta, 0.4))
-        old_parts = jnp.asarray(mesh.leaf_payload["parts"])
+    err = float(jnp.max(jnp.abs(u - prob.exact(verts))))
+    gap = float(jnp.max(jnp.abs(u - res.u)))
+    print(f"sharded PCG on final mesh: cg_iters={int(sol.iters)} "
+          f"max_err={err:.3e} |u_sharded - u_session|_inf={gap:.3e}")
 
 
 if __name__ == "__main__":

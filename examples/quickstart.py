@@ -2,8 +2,10 @@
 
 Adaptive FEM solve of the Helmholtz problem (paper Example 3.1) on a
 high-aspect-ratio cylinder, with dynamic load balancing each adaptive
-step, comparing the paper's partitioners -- each described by a
-declarative ``BalanceSpec`` and resolved by the ``Balancer`` facade.
+step.  The whole loop is declarative: an ``AdaptSpec`` describes the
+solve->estimate->mark->refine->balance pipeline (with a nested
+``BalanceSpec`` for the balance stage) and ``AdaptiveSession`` resolves
+it into registered stage functions.
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -15,8 +17,7 @@ import os
 import numpy as np
 
 from repro.core import Balancer, BalanceSpec
-from repro.fem import cylinder_mesh
-from repro.fem.adapt import solve_helmholtz_adaptive
+from repro.fem import AdaptSpec, AdaptiveSession, cylinder_mesh
 
 SMOKE = bool(os.environ.get("QUICKSTART_SMOKE"))
 
@@ -29,10 +30,13 @@ def main():
     print("== paper Example 3.1 (reduced): adaptive Helmholtz on a "
           "cylinder, p=16 simulated processes ==")
     for method in methods:
-        mesh = cylinder_mesh(8, 2, length=4.0, radius=0.5)
-        res = solve_helmholtz_adaptive(
-            mesh, p=16, method=method, max_steps=max_steps,
-            max_tets=max_tets, tol=1e-6)
+        # one declarative description of the whole adaptive loop; specs
+        # serialize to plain dicts, so launchers can ship them around
+        spec = AdaptSpec.for_problem(
+            "helmholtz", max_steps=max_steps, max_tets=max_tets, tol=1e-6,
+            balance=BalanceSpec(p=16, method=method))
+        res = AdaptiveSession(spec).run(
+            cylinder_mesh(8, 2, length=4.0, radius=0.5))
         last = res.stats[-1]
         t_bal = sum(s.t_balance for s in res.stats)
         mig = sum(s.migration_totalv for s in res.stats)

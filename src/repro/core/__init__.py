@@ -18,9 +18,9 @@ from .rtree import RefinementForest, partition_dfs, rtk_partition_forest
 from .sfc import (bounding_box, box_map, hilbert_decode, hilbert_encode,
                   morton_decode, morton_encode, sfc_keys)
 from .spec import (BACKENDS, METHODS, ONED_SOLVERS, SFC_METHODS, STAGES,
-                   Balancer, BalanceResult, BalanceSpec, compute_cut,
-                   get_stage, register_stage, resolve_variants,
-                   stage_variants)
+                   Balancer, BalanceResult, BalanceSpec, Spec, compute_cut,
+                   get_stage, register_spec_pytree, register_stage,
+                   resolve_variants, stage_variants)
 
 __all__ = [
     "BACKENDS", "METHODS", "ONED_SOLVERS", "SFC_METHODS", "STAGES",
@@ -30,8 +30,9 @@ __all__ = [
     "distributed_prefix_parts", "exclusive_scan_over_axis", "get_stage",
     "greedy_map", "greedy_map_jnp", "imbalance", "ksection",
     "migration_volume", "morton_decode", "morton_encode", "partition_dfs",
-    "prefix_sum_parts", "quality", "rcb_partition", "register_stage",
-    "remap", "resolve_variants", "rtk_partition_forest",
+    "prefix_sum_parts", "quality", "rcb_partition", "register_spec_pytree",
+    "register_stage", "remap", "resolve_variants", "rtk_partition_forest",
+    "Spec",
     "similarity_matrix", "sfc_keys", "sorted_exact", "stage_variants",
     "hilbert_decode", "hilbert_encode",
 ]

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, ClassVar, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,11 +57,76 @@ STAGES = ("keys", "partition1d", "remap", "migrate")
 
 
 # ---------------------------------------------------------------------------
+# Spec base: shared behavior of declarative frozen-dataclass specs
+# ---------------------------------------------------------------------------
+
+class Spec:
+    """Mixin for frozen declarative spec dataclasses.
+
+    Provides the contract every spec in the codebase shares
+    (``BalanceSpec`` here, ``AdaptSpec`` in ``repro.fem.adapt``):
+
+    * ``to_dict`` / ``from_dict`` -- lossless plain-dict (JSON-safe)
+      round-trip, recursing into nested specs (declare them in
+      ``_NESTED_SPECS``); unknown keys are rejected loudly.
+    * ``replace`` -- ``dataclasses.replace`` that re-runs validation.
+
+    Combine with ``register_spec_pytree`` so the spec crosses ``jax.jit``
+    boundaries as static (leaf-free, hashable) configuration.
+    """
+
+    #: field name -> Spec subclass for nested-spec reconstruction
+    _NESTED_SPECS: ClassVar[Mapping[str, type]] = {}
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-dict form (JSON-safe; round-trips via ``from_dict``)."""
+        out: Dict[str, Any] = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            out[f.name] = v.to_dict() if isinstance(v, Spec) else v
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "Spec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown {cls.__name__} fields: {sorted(unknown)}")
+        kw = dict(d)
+        for name, sub in cls._NESTED_SPECS.items():
+            if isinstance(kw.get(name), Mapping):
+                kw[name] = sub.from_dict(kw[name])
+        return cls(**kw)
+
+    def replace(self, **kw) -> "Spec":
+        return dataclasses.replace(self, **kw)
+
+
+def register_spec_pytree(cls):
+    """Register a frozen ``Spec`` dataclass as a leaf-free static pytree.
+
+    The whole spec rides in the treedef (aux data), so jitted functions
+    treat two calls with equal specs as one cache entry and specs never
+    become traced values.  Usable as a class decorator."""
+
+    def flatten(spec):
+        return (), spec
+
+    def unflatten(aux, _children):
+        return aux
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+# ---------------------------------------------------------------------------
 # BalanceSpec
 # ---------------------------------------------------------------------------
 
+@register_spec_pytree
 @dataclasses.dataclass(frozen=True)
-class BalanceSpec:
+class BalanceSpec(Spec):
     """Declarative description of one DLB pipeline.
 
     Fields (old ``DynamicLoadBalancer`` kwargs map 1:1, see ROADMAP's
@@ -128,34 +193,6 @@ class BalanceSpec:
         segments drops it and every mask is just ``old_parts < p``.
         """
         return self.p
-
-    # -- serialization ------------------------------------------------------
-    def to_dict(self) -> Dict[str, Any]:
-        """Plain-dict form (JSON-safe; round-trips via ``from_dict``)."""
-        return dataclasses.asdict(self)
-
-    @classmethod
-    def from_dict(cls, d: Dict[str, Any]) -> "BalanceSpec":
-        known = {f.name for f in dataclasses.fields(cls)}
-        unknown = set(d) - known
-        if unknown:
-            raise ValueError(f"unknown BalanceSpec fields: {sorted(unknown)}")
-        return cls(**d)
-
-    def replace(self, **kw) -> "BalanceSpec":
-        return dataclasses.replace(self, **kw)
-
-
-def _spec_flatten(spec: BalanceSpec):
-    return (), tuple(dataclasses.asdict(spec).items())
-
-
-def _spec_unflatten(aux, _children) -> BalanceSpec:
-    return BalanceSpec(**dict(aux))
-
-
-jax.tree_util.register_pytree_node(BalanceSpec, _spec_flatten,
-                                   _spec_unflatten)
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,23 @@
-"""Adaptive FEM substrate (the paper's host application) in JAX."""
-from .adapt import (AdaptiveResult, StepStats, solve_helmholtz_adaptive,
-                    solve_parabolic_adaptive, transfer_p1)
+"""Adaptive FEM substrate (the paper's host application) in JAX.
+
+The adaptive loop is declarative: an ``AdaptSpec`` describes the whole
+solve->estimate->mark->refine/coarsen->balance pipeline (problem,
+marking, trigger policy, nested ``BalanceSpec``, backend, stepping) and
+``AdaptiveSession`` resolves it into registered loop stages.  The old
+``solve_*_adaptive`` drivers are deprecated thin wrappers.
+"""
+from .adapt import (ADAPT_STAGES, TRIGGERS, AdaptSpec, AdaptiveResult,
+                    AdaptiveSession, SessionState, StepStats,
+                    adapt_stage_variants, get_adapt_stage, peak_init,
+                    register_adapt_stage, resolve_adapt_variants,
+                    solve_helmholtz_adaptive, solve_parabolic_adaptive,
+                    transfer_p1)
 from .assemble import (P1Elements, build_elements, element_gradients,
                        load_vector, mass_matvec, operator_diagonal,
                        stiffness_matvec)
 from .estimate import doerfler_mark, threshold_coarsen_mark, zz_estimate
 from .mesh import Mesh, cylinder_mesh, kuhn_box_mesh, unit_cube_mesh
-from .problems import HelmholtzProblem, ParabolicProblem
+from .problems import (HelmholtzProblem, ParabolicProblem, ProblemSetup,
+                       get_problem, problem_names, register_problem)
 from .refine import coarsen, refine, uniform_refine
 from .solve import CGResult, pcg, solve_dirichlet

@@ -1,39 +1,77 @@
-"""Adaptive FEM driver with integrated dynamic load balancing.
+"""Declarative adaptive-FEM engine: ``AdaptSpec`` + ``AdaptiveSession``.
 
 The paper's computation model per adaptive step:
 
     solve -> estimate -> mark -> refine(/coarsen) -> **balance** -> repeat
 
-``balance`` is a full DLB step (partition + Oliker--Biswas remap +
-migration accounting) via the declarative ``repro.core.Balancer`` resolved
-from a ``BalanceSpec``.  The paper's
-repartition trigger is used: rebalance only when the load imbalance
-exceeds a threshold, and the number of repartitionings is reported
-(paper Table 1).
+PR 2 made the *balance* stage declarative (``repro.core.BalanceSpec`` +
+stage registry + ``Balancer``).  This module extends the same design one
+level up, to the loop that drives it:
 
-On this single-device container the partition drives the *simulated*
-process decomposition (quality + migration metrics, exactly the paper's
-reported quantities); ``repro.fem.parallel`` runs the same partition on an
-actual multi-device mesh via shard_map.
+* ``AdaptSpec``       -- a frozen ``Spec`` dataclass describing the whole
+  loop: problem name (resolved through ``repro.fem.problems``), marking
+  (Dörfler ``theta`` / ``coarsen_frac``), repartition trigger policy,
+  the nested ``balance: BalanceSpec``, backend, size/step limits, and
+  time stepping (``dt``/``n_steps``; ``dt == 0`` means stationary).
+  Hashable, leaf-free pytree, plain-dict round-trip (nested spec
+  included).
+* stage registry      -- loop stages registered per ``(stage, variant)``:
+  ``solve`` ('stationary' | 'backward_euler'), ``estimate`` ('zz'),
+  ``mark`` ('doerfler'), ``adapt_mesh`` ('refine' | 'coarsen_refine'),
+  ``transfer`` ('p1'), ``balance`` ('host' | 'sharded').  New physics or
+  backends register variants instead of forking the driver.
+* ``AdaptiveSession`` -- resolves a spec into stage functions, runs the
+  loop template for the problem kind, centralizes per-stage wall-clock
+  timing and ``StepStats`` emission, and invokes user hooks
+  (``on_step`` / ``on_stage``).
+
+The repartition trigger is the paper's: rebalance only when the inherited
+partition's load imbalance exceeds a threshold (``trigger='imbalance'``),
+or every step / only once (``'always'`` / ``'never'``); the number of
+repartitionings is reported (paper Table 1).  The previous partition is
+threaded into every balance call, so the Oliker--Biswas remap and the
+migration metrics are live on both the stationary and the time-dependent
+loop (the old parabolic driver dropped ``old_parts`` -- fixed here by
+construction).
+
+``backend='sharded'`` resolves the nested ``BalanceSpec`` onto the
+on-device pipeline and adds the element-payload resharding
+(``fem.parallel.shard_elements_on_device``) to the balance stage, so the
+refined mesh's payloads migrate between devices with the executor's
+``all_to_all`` after every repartition.
+
+``solve_helmholtz_adaptive`` / ``solve_parabolic_adaptive`` remain as
+deprecated thin wrappers that build a spec and delegate to the session.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, ClassVar, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import Balancer, BalanceSpec, imbalance
+from ..core.spec import Spec, register_spec_pytree
 from .assemble import build_elements, load_vector, mass_matvec
 from .estimate import doerfler_mark, threshold_coarsen_mark, zz_estimate
 from .mesh import Mesh
-from .problems import HelmholtzProblem, ParabolicProblem
+from .problems import ParabolicProblem, ProblemSetup, get_problem
 from .refine import coarsen, refine
 from .solve import solve_dirichlet
 
+ADAPT_STAGES = ("solve", "estimate", "mark", "adapt_mesh", "transfer",
+                "balance")
+TRIGGERS = ("imbalance", "always", "never")
+ADAPT_BACKENDS = ("host", "sharded")
+
+
+# ---------------------------------------------------------------------------
+# Per-step records
+# ---------------------------------------------------------------------------
 
 @dataclass
 class StepStats:
@@ -50,6 +88,8 @@ class StepStats:
     repartitioned: bool
     migration_totalv: float = 0.0
     cut: Optional[int] = None
+    migration_retained: float = 0.0
+    t_transfer: float = 0.0
 
 
 @dataclass
@@ -59,8 +99,226 @@ class AdaptiveResult:
     u: Optional[jax.Array] = None
     mesh: Optional[Mesh] = None
     # backend='sharded': the latest on-device (p, C, ...) element packing
-    # produced by fem.parallel.shard_elements_on_device after refinement
+    # produced by fem.parallel.shard_elements_on_device after balancing
     sharded: Optional[object] = None
+    spec: Optional["AdaptSpec"] = None
+
+
+# ---------------------------------------------------------------------------
+# AdaptSpec
+# ---------------------------------------------------------------------------
+
+@register_spec_pytree
+@dataclass(frozen=True)
+class AdaptSpec(Spec):
+    """Declarative description of one adaptive solve.
+
+    Fields (old driver kwargs map 1:1, see ROADMAP's migration guide):
+
+    problem            registered problem name ('helmholtz', 'parabolic',
+                       or anything added via ``fem.problems
+                       .register_problem``); selects physics, the solve
+                       variant (stationary vs backward Euler), and the
+                       default mesh
+    theta              Dörfler bulk-marking fraction
+    coarsen_frac       time-dependent loop: coarsen elements with
+                       ``eta < coarsen_frac * mean(eta)`` before refining
+    estimate, mark     stage variant names (extensible via
+                       ``register_adapt_stage``)
+    solve              solve variant; 'auto' resolves from the problem
+                       kind ('stationary' | 'backward_euler')
+    trigger            repartition policy: 'imbalance' (the paper's --
+                       repartition when the inherited partition exceeds
+                       ``imbalance_trigger``), 'always', or 'never'
+                       (partition once at the first step, then keep it)
+    balance            nested ``repro.core.BalanceSpec``; its ``backend``
+                       is overridden by this spec's ``backend``
+    backend            'host' | 'sharded' (on-device balance pipeline +
+                       element-payload resharding per step)
+    max_steps          stationary: adaptive iterations
+    max_tets           stop refining beyond this many elements
+    dt, n_steps        time stepping (backward Euler); ``dt == 0`` means
+                       stationary and ``n_steps`` must be 0
+    tol, maxiter       PCG stopping criteria
+    """
+    problem: str = "helmholtz"
+    theta: float = 0.5
+    coarsen_frac: float = 0.0
+    estimate: str = "zz"
+    mark: str = "doerfler"
+    solve: str = "auto"
+    trigger: str = "imbalance"
+    imbalance_trigger: float = 1.05
+    balance: BalanceSpec = BalanceSpec(p=16, method="hsfc")
+    backend: str = "host"
+    max_steps: int = 10
+    max_tets: int = 200_000
+    dt: float = 0.0
+    n_steps: int = 0
+    tol: float = 1e-8
+    maxiter: int = 2000
+
+    _NESTED_SPECS: ClassVar[Mapping[str, type]] = {"balance": BalanceSpec}
+
+    def __post_init__(self):
+        if not isinstance(self.balance, BalanceSpec):
+            raise ValueError("balance must be a BalanceSpec (got "
+                             f"{type(self.balance).__name__})")
+        if self.trigger not in TRIGGERS:
+            raise ValueError(f"unknown trigger {self.trigger!r}; "
+                             f"choose from {TRIGGERS}")
+        if self.backend not in ADAPT_BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"choose from {ADAPT_BACKENDS}")
+        if not 0.0 < self.theta <= 1.0:
+            raise ValueError(f"theta must be in (0, 1], got {self.theta}")
+        if self.coarsen_frac < 0.0:
+            raise ValueError("coarsen_frac must be >= 0")
+        if self.dt < 0.0:
+            raise ValueError("dt must be >= 0 (0 means stationary)")
+        if self.dt > 0.0 and self.n_steps < 1:
+            raise ValueError("time-dependent spec (dt > 0) needs n_steps >= 1")
+        if self.dt == 0.0 and self.n_steps != 0:
+            raise ValueError("n_steps is only meaningful with dt > 0; "
+                             "stationary specs use max_steps")
+        if self.dt == 0.0 and self.max_steps < 1:
+            raise ValueError("max_steps must be >= 1")
+
+    @property
+    def stationary(self) -> bool:
+        return self.dt == 0.0
+
+    @property
+    def p(self) -> int:
+        """Number of parts / simulated processes (from the nested spec)."""
+        return self.balance.p
+
+    @classmethod
+    def for_problem(cls, name: str, **overrides) -> "AdaptSpec":
+        """Spec seeded from a registered problem's paper defaults.
+
+        Pulls ``theta`` / ``coarsen_frac`` / ``max_tets`` from the
+        ``ProblemSetup``; parabolic problems additionally default to
+        ``trigger='always'`` with ``dt=0.01, n_steps=20`` (the paper's
+        Example 3.2 configuration).  Any field can be overridden."""
+        setup = get_problem(name)
+        kw: Dict[str, Any] = dict(problem=name, theta=setup.theta,
+                                  coarsen_frac=setup.coarsen_frac,
+                                  max_tets=setup.max_tets)
+        if setup.kind == "parabolic":
+            kw.update(trigger="always", dt=0.01, n_steps=20)
+        kw.update(overrides)
+        return cls(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Stage registry (mirrors repro.core.spec's (backend, stage, variant) one)
+# ---------------------------------------------------------------------------
+
+_ADAPT_REGISTRY: Dict[Tuple[str, str], Callable] = {}
+
+
+def register_adapt_stage(stage: str, variant: str) -> Callable:
+    """Decorator: register a loop-stage function under ``(stage, variant)``.
+
+    Stage functions take ``(session, state)`` and mutate the
+    ``SessionState`` in place; the session owns timing and ordering.
+    """
+    if stage not in ADAPT_STAGES:
+        raise ValueError(f"unknown adapt stage {stage!r}; "
+                         f"choose from {ADAPT_STAGES}")
+
+    def deco(fn):
+        _ADAPT_REGISTRY[(stage, variant)] = fn
+        return fn
+    return deco
+
+
+def get_adapt_stage(stage: str, variant: str) -> Callable:
+    try:
+        return _ADAPT_REGISTRY[(stage, variant)]
+    except KeyError:
+        avail = adapt_stage_variants(stage)
+        raise ValueError(
+            f"no {stage!r} stage variant {variant!r} registered; "
+            f"available: {avail}") from None
+
+
+def adapt_stage_variants(stage: str):
+    """Registered variant names for an adapt-loop stage."""
+    return sorted(v for (s, v) in _ADAPT_REGISTRY if s == stage)
+
+
+def resolve_adapt_variants(spec: AdaptSpec,
+                           setup: Optional[ProblemSetup] = None
+                           ) -> Dict[str, Optional[str]]:
+    """Map a spec to the stage variants its loop uses.
+
+    ``transfer`` is ``None`` for stationary problems (nothing to carry
+    between meshes); the time-dependent loop folds estimate+mark into its
+    ``adapt_mesh`` variant but still resolves them for the nested calls.
+    """
+    if setup is None:
+        setup = get_problem(spec.problem)
+    solve = spec.solve
+    if solve == "auto":
+        solve = ("stationary" if setup.kind == "stationary"
+                 else "backward_euler")
+    stationary = setup.kind == "stationary"
+    return {
+        "solve": solve,
+        "estimate": spec.estimate,
+        "mark": spec.mark,
+        "adapt_mesh": "refine" if stationary else "coarsen_refine",
+        "transfer": None if stationary else "p1",
+        "balance": spec.backend,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Session state
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SessionState:
+    """Mutable per-run state threaded through the stage functions."""
+    mesh: Mesh
+    step: int = 0
+    t: float = 0.0                      # physical time (time-dependent)
+    el: Any = None                      # P1Elements of the current mesh
+    u: Any = None                       # nodal solution on the current mesh
+    eta: Optional[np.ndarray] = None    # per-element error indicators
+    marked: Optional[np.ndarray] = None
+    active_before: Optional[np.ndarray] = None   # pre-refine vertex mask
+    grew: bool = True
+    cg_iters: int = 0
+    err_l2: Optional[float] = None
+    repartitioned: bool = False
+    step_imbalance: float = float("nan")
+    migration_totalv: float = 0.0
+    migration_retained: float = 0.0
+    balance_result: Any = None          # core.BalanceResult of last repart
+    sharded: Any = None                 # latest ShardedElements (sharded)
+    timings: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def parts(self) -> Optional[np.ndarray]:
+        """Current element partition (propagated through refine/coarsen)."""
+        return self.mesh.leaf_payload.get("parts")
+
+
+def _ensure_elements(state: SessionState):
+    """(Re)build P1 element arrays iff the cached ones are stale."""
+    el = state.el
+    if el is None or int(el.tets.shape[0]) != state.mesh.n_tets:
+        state.el = build_elements(state.mesh.verts, state.mesh.tets)
+    return state.el
+
+
+def _free_mask(mesh: Mesh) -> jax.Array:
+    free = np.ones(mesh.n_verts, np.float64)
+    free[mesh.boundary_vertices()] = 0.0
+    return jnp.asarray(free)
 
 
 def _l2_error(el, verts, u, exact) -> float:
@@ -72,6 +330,336 @@ def _l2_error(el, verts, u, exact) -> float:
     return float(np.sqrt((((uq - ue) ** 2).mean(axis=1) * vol).sum()))
 
 
+# ---------------------------------------------------------------------------
+# Stage implementations
+# ---------------------------------------------------------------------------
+
+@register_adapt_stage("solve", "stationary")
+def _solve_stationary(session: "AdaptiveSession", state: SessionState):
+    """One Dirichlet solve of ``-Delta u + c u = f`` on the current mesh."""
+    prob = session.problem
+    el = _ensure_elements(state)
+    verts = jnp.asarray(state.mesh.verts)
+    rhs = load_vector(el, verts, prob.f)
+    sol = solve_dirichlet(el, rhs, prob.exact(verts), _free_mask(state.mesh),
+                          prob.c, tol=session.spec.tol,
+                          maxiter=session.spec.maxiter)
+    state.u = jax.block_until_ready(sol.x)
+    state.cg_iters = int(sol.iters)
+
+
+@register_adapt_stage("solve", "backward_euler")
+def _solve_backward_euler(session: "AdaptiveSession", state: SessionState):
+    """One backward-Euler step ``(M/dt + A) u = M u_prev/dt + f(t+dt)``."""
+    prob = session.problem
+    spec = session.spec
+    t_next = state.t + spec.dt
+    el = _ensure_elements(state)
+    verts = jnp.asarray(state.mesh.verts)
+    fv = load_vector(el, verts, lambda x: prob.f(x, t_next))
+    rhs = mass_matvec(el, jnp.asarray(state.u)) / spec.dt + fv
+    sol = solve_dirichlet(el, rhs, prob.exact(verts, t_next),
+                          _free_mask(state.mesh), 1.0 / spec.dt,
+                          tol=spec.tol, maxiter=spec.maxiter)
+    state.u = jax.block_until_ready(sol.x)
+    state.cg_iters = int(sol.iters)
+
+
+@register_adapt_stage("estimate", "zz")
+def _estimate_zz(session: "AdaptiveSession", state: SessionState):
+    """Zienkiewicz--Zhu gradient-recovery indicators for the current u."""
+    el = _ensure_elements(state)
+    state.eta = np.asarray(jax.block_until_ready(
+        zz_estimate(el, jnp.asarray(state.u))))
+
+
+@register_adapt_stage("mark", "doerfler")
+def _mark_doerfler(session: "AdaptiveSession", state: SessionState):
+    state.marked = doerfler_mark(state.eta, session.spec.theta)
+
+
+@register_adapt_stage("adapt_mesh", "refine")
+def _adapt_refine(session: "AdaptiveSession", state: SessionState):
+    """Stationary loop: refine the marked set (no coarsening).
+
+    The final step and the ``max_tets`` ceiling skip refinement so the
+    reported solution lives on the solved mesh."""
+    spec = session.spec
+    state.grew = False
+    last = spec.stationary and state.step >= spec.max_steps - 1
+    if state.mesh.n_tets < spec.max_tets and not last:
+        refine(state.mesh, state.marked)
+        state.grew = True
+
+
+@register_adapt_stage("adapt_mesh", "coarsen_refine")
+def _adapt_coarsen_refine(session: "AdaptiveSession", state: SessionState):
+    """Time-dependent loop: adapt to the *current* solution before
+    stepping -- coarsen first (vertex ids survive append-only, u stays
+    valid), then re-estimate on the coarsened mesh and refine.  Leaves
+    ``state.eta`` at the post-coarsen indicators (the step's reported
+    eta) and records the pre-refine vertex-activity mask for transfer."""
+    spec, mesh = session.spec, state.mesh
+    estimate = session.stage_fn("estimate")
+    state.el = None
+    estimate(session, state)
+    coarsen(mesh, threshold_coarsen_mark(state.eta, spec.coarsen_frac))
+    state.el = None
+    estimate(session, state)
+    session.stage_fn("mark")(session, state)
+    state.active_before = np.zeros(mesh.n_verts, bool)
+    state.active_before[np.unique(mesh.tets)] = True
+    state.grew = False
+    if mesh.n_tets < spec.max_tets:
+        refine(mesh, state.marked)
+        state.grew = True
+
+
+@register_adapt_stage("transfer", "p1")
+def _transfer_stage_p1(session: "AdaptiveSession", state: SessionState):
+    state.u = transfer_p1(np.asarray(state.u), state.active_before,
+                          state.mesh)
+
+
+def _balance_common(session: "AdaptiveSession", state: SessionState):
+    """Trigger policy + one DLB step; parts persist in ``leaf_payload``
+    so refine/coarsen propagate them to the next step (children inherit).
+    """
+    spec, mesh = session.spec, state.mesh
+    p = session.balance_spec.p
+    w = jnp.ones(mesh.n_tets, jnp.float32)
+    inherited = mesh.leaf_payload.get("parts")
+    if inherited is not None and len(inherited) != mesh.n_tets:
+        inherited = None                 # stale payload on a foreign mesh
+    # current imbalance of the inherited partition -- only evaluated when
+    # a trigger decision or a no-repartition stat needs it (it costs a
+    # device reduction + host sync); defined before every use (the old
+    # driver left it unbound on the first step)
+    cur = float("inf")
+    if inherited is not None and spec.trigger != "always":
+        cur = float(imbalance(jnp.asarray(inherited), w, p))
+    if spec.trigger == "always":
+        repart = True
+    elif spec.trigger == "never":
+        repart = inherited is None       # must partition at least once
+    else:                                # 'imbalance' (the paper's)
+        repart = inherited is None or cur > spec.imbalance_trigger
+    if repart:
+        old = None if inherited is None else jnp.asarray(inherited)
+        br = session.balancer.balance(
+            w, coords=jnp.asarray(mesh.barycenters()), old_parts=old)
+        parts = br.parts
+        state.balance_result = br
+        state.step_imbalance = float(br.imbalance)
+        state.migration_totalv = float(br.total_v)
+        state.migration_retained = float(br.retained)
+    else:
+        parts = jnp.asarray(inherited)
+        state.balance_result = None
+        state.step_imbalance = cur
+        state.migration_totalv = 0.0
+        state.migration_retained = 0.0
+    state.repartitioned = repart
+    mesh.leaf_payload["parts"] = np.asarray(parts)
+
+
+@register_adapt_stage("balance", "host")
+def _balance_host(session: "AdaptiveSession", state: SessionState):
+    _balance_common(session, state)
+
+
+@register_adapt_stage("balance", "sharded")
+def _balance_sharded(session: "AdaptiveSession", state: SessionState):
+    """Sharded balance: the DLB pipeline runs in one jitted shard_map
+    region (via the sharded ``Balancer``), then the mesh's element
+    payloads are re-packed across devices with the migration executor's
+    ``all_to_all`` -- the paper's per-step data migration, for real."""
+    from .parallel import shard_elements_on_device
+    _balance_common(session, state)
+    el = _ensure_elements(state)
+    state.sharded = shard_elements_on_device(
+        el, jnp.asarray(state.mesh.leaf_payload["parts"]),
+        session.balance_spec.p, session.device_mesh)
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveSession
+# ---------------------------------------------------------------------------
+
+class AdaptiveSession:
+    """Resolve an ``AdaptSpec`` into an executable adaptive loop.
+
+    The session owns loop templates (stationary / time-dependent), calls
+    the registered stage functions, centralizes per-stage wall-clock
+    timing, emits one ``StepStats`` per step, and invokes user hooks:
+
+    ``on_step(stats, state)``          after each completed step;
+    ``on_stage(stage, variant, dt)``   after each top-level stage call.
+
+    ``run(mesh)`` uses the given mesh, else the session's, else the
+    problem's registered default mesh factory.
+    """
+
+    def __init__(self, spec: AdaptSpec, *, mesh: Optional[Mesh] = None,
+                 devices=None, verbose: bool = False,
+                 on_step: Optional[Callable] = None,
+                 on_stage: Optional[Callable] = None):
+        self.spec = spec
+        self.setup = get_problem(spec.problem)
+        if self.setup.kind == "parabolic" and spec.stationary:
+            raise ValueError(f"problem {spec.problem!r} is time-dependent; "
+                             "set dt > 0 and n_steps on the AdaptSpec")
+        if self.setup.kind == "stationary" and not spec.stationary:
+            raise ValueError(f"problem {spec.problem!r} is stationary; "
+                             "dt must be 0 (use max_steps)")
+        self.problem = self.setup.make()
+        bspec = spec.balance
+        if bspec.backend != spec.backend:
+            bspec = bspec.replace(backend=spec.backend)
+        self.balance_spec = bspec
+        # fails fast: sharded backend checks device count / stage variants
+        self.balancer = Balancer.from_spec(bspec, devices=devices)
+        self.variants = resolve_adapt_variants(spec, self.setup)
+        self._stages = {s: get_adapt_stage(s, v)
+                        for s, v in self.variants.items() if v is not None}
+        self.verbose = verbose
+        self.on_step, self.on_stage = on_step, on_stage
+        self._mesh = mesh
+        self._devices = devices
+        self._device_mesh = None
+
+    @property
+    def device_mesh(self):
+        """Lazily built jax device mesh for the sharded element packing."""
+        if self._device_mesh is None:
+            from .parallel import device_mesh
+            self._device_mesh = device_mesh(self.balance_spec.p,
+                                            devices=self._devices)
+        return self._device_mesh
+
+    def stage_fn(self, stage: str) -> Callable:
+        """The resolved stage function (for nesting inside other stages)."""
+        return self._stages[stage]
+
+    # -- timed stage dispatch ----------------------------------------------
+    def _run_stage(self, stage: str, state: SessionState,
+                   bucket: Optional[str] = None) -> None:
+        fn = self._stages[stage]
+        t0 = time.perf_counter()
+        fn(self, state)
+        dt = time.perf_counter() - t0
+        key = bucket or stage
+        state.timings[key] = state.timings.get(key, 0.0) + dt
+        if self.on_stage is not None:
+            self.on_stage(stage, self.variants[stage], dt)
+
+    # -- loop templates ----------------------------------------------------
+    def _step_stationary(self, state: SessionState) -> None:
+        _ensure_elements(state)
+        self._run_stage("solve", state)
+        self._run_stage("estimate", state)
+        state.err_l2 = _l2_error(state.el, state.mesh.verts, state.u,
+                                 self.problem.exact)
+        # mark + refine share the t_refine bucket (as the paper reports)
+        self._run_stage("mark", state, bucket="adapt_mesh")
+        self._run_stage("adapt_mesh", state)
+        self._run_stage("balance", state)
+
+    def _step_timedep(self, state: SessionState) -> None:
+        t_next = state.t + self.spec.dt
+        self._run_stage("adapt_mesh", state)      # estimate/coarsen/.../refine
+        self._run_stage("transfer", state)
+        _ensure_elements(state)
+        self._run_stage("solve", state)
+        state.err_l2 = _l2_error(state.el, state.mesh.verts, state.u,
+                                 lambda x: self.problem.exact(x, t_next))
+        self._run_stage("balance", state)
+        state.t = t_next
+
+    # -- public entry ------------------------------------------------------
+    def run(self, mesh: Optional[Mesh] = None) -> AdaptiveResult:
+        spec = self.spec
+        mesh = mesh if mesh is not None else self._mesh
+        if mesh is None:
+            mesh = self.setup.default_mesh()
+        state = SessionState(mesh=mesh)
+        result = AdaptiveResult(spec=spec)
+        stationary = self.setup.kind == "stationary"
+        if not stationary:
+            # initial condition: interpolate exact at t = 0
+            state.u = np.asarray(self.problem.exact(jnp.asarray(mesh.verts),
+                                                    0.0))
+        n_iters = spec.max_steps if stationary else spec.n_steps
+        for step in range(n_iters):
+            state.step = step
+            state.timings = {}
+            if stationary:
+                self._step_stationary(state)
+            else:
+                self._step_timedep(state)
+            stats = self._emit_stats(state)
+            result.stats.append(stats)
+            if state.repartitioned:
+                result.n_repartitions += 1
+            if self.on_step is not None:
+                self.on_step(stats, state)
+            if self.verbose:
+                head = (f"[{step}]" if stationary else f"[t={state.t:.3f}]")
+                print(f"{head} nt={stats.n_tets:7d} err={stats.err_l2:.3e} "
+                      f"eta={stats.eta:.3e} cg={stats.cg_iters} "
+                      f"imb={stats.imbalance:.3f} "
+                      f"solve={stats.t_solve:.2f}s "
+                      f"bal={stats.t_balance:.3f}s")
+            if stationary and not state.grew:
+                break
+        if state.u is not None:
+            result.u = jnp.asarray(state.u)
+        result.mesh = state.mesh
+        result.sharded = state.sharded
+        return result
+
+    def _emit_stats(self, state: SessionState) -> StepStats:
+        eta2 = np.asarray(state.eta, np.float64) ** 2
+        tm = state.timings
+        return StepStats(
+            n_tets=state.mesh.n_tets, n_verts=state.mesh.n_verts,
+            eta=float(np.sqrt(eta2.sum())), err_l2=state.err_l2,
+            cg_iters=state.cg_iters,
+            t_solve=tm.get("solve", 0.0),
+            t_estimate=tm.get("estimate", 0.0),
+            t_refine=tm.get("adapt_mesh", 0.0),
+            t_balance=tm.get("balance", 0.0),
+            imbalance=state.step_imbalance,
+            repartitioned=state.repartitioned,
+            migration_totalv=state.migration_totalv,
+            migration_retained=state.migration_retained,
+            t_transfer=tm.get("transfer", 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Deprecated driver wrappers
+# ---------------------------------------------------------------------------
+
+_DEPRECATION_WARNED = False
+
+
+def _warn_deprecated_once(name: str) -> None:
+    """Emit the legacy-driver DeprecationWarning once per process."""
+    global _DEPRECATION_WARNED
+    if not _DEPRECATION_WARNED:
+        _DEPRECATION_WARNED = True
+        warnings.warn(
+            f"{name} is deprecated; build an AdaptSpec and use "
+            "repro.fem.AdaptiveSession(spec).run(mesh) instead",
+            DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warning() -> None:
+    """Testing hook: allow the once-per-process warning to fire again."""
+    global _DEPRECATION_WARNED
+    _DEPRECATION_WARNED = False
+
+
 def solve_helmholtz_adaptive(mesh: Mesh, *, p: int = 16,
                              method: str = "hsfc",
                              theta: float = 0.5,
@@ -81,103 +669,18 @@ def solve_helmholtz_adaptive(mesh: Mesh, *, p: int = 16,
                              tol: float = 1e-8,
                              backend: str = "host",
                              verbose: bool = False) -> AdaptiveResult:
-    """Paper Example 3.1: adaptive Helmholtz on the given mesh.
+    """DEPRECATED -- paper Example 3.1 via ``AdaptiveSession``.
 
-    backend='sharded' runs each DLB step inside one jitted shard_map
-    region (repro.distributed.DistributedBalancer; needs
-    ``jax.device_count() >= p``) and additionally re-shards the refined
-    mesh's element payloads on device (``shard_elements_on_device``) --
-    the paper's per-step data migration, exercised for real.  The PCG
-    solve itself still runs the single-device operator (the sharded
-    matvec consumes ``result.sharded``; wiring it into the solver needs
-    the halo-exchange vertex sharding noted in ROADMAP).
-    """
-    prob = HelmholtzProblem()
-    balancer = Balancer.from_spec(
-        BalanceSpec(p=p, method=method, backend=backend))
-    result = AdaptiveResult()
-    old_parts = None
-
-    for step in range(max_steps):
-        el = build_elements(mesh.verts, mesh.tets)
-        # (constructing the sharded balancer above already guaranteed
-        # jax.device_count() >= p)
-        if backend == "sharded":
-            prev = mesh.leaf_payload.get("parts")
-            if prev is not None and len(prev) == mesh.n_tets:
-                from jax.sharding import Mesh as _JMesh
-                from .parallel import AXIS as _FAXIS, shard_elements_on_device
-                _pmesh = _JMesh(np.array(jax.devices()[:p]), (_FAXIS,))
-                result.sharded = shard_elements_on_device(
-                    el, jnp.asarray(prev), p, _pmesh)
-        verts = jnp.asarray(mesh.verts)
-        bverts = mesh.boundary_vertices()
-        free = np.ones(mesh.n_verts, np.float64)
-        free[bverts] = 0.0
-        free = jnp.asarray(free)
-        g = prob.exact(verts)
-
-        t0 = time.perf_counter()
-        rhs = load_vector(el, verts, prob.f)
-        sol = solve_dirichlet(el, rhs, g, free, prob.c, tol=tol)
-        u = jax.block_until_ready(sol.x)
-        t_solve = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        eta = jax.block_until_ready(zz_estimate(el, u))
-        t_est = time.perf_counter() - t0
-
-        err = _l2_error(el, mesh.verts, u, prob.exact)
-
-        # mark + refine (part assignment rides along: children inherit)
-        t0 = time.perf_counter()
-        marked = doerfler_mark(np.asarray(eta), theta)
-        grew = False
-        if mesh.n_tets < max_tets and step < max_steps - 1:
-            refine(mesh, marked)
-            grew = True
-        t_ref = time.perf_counter() - t0
-
-        # balance the *new* mesh (weights = 1 per element, paper default);
-        # repartition only when the inherited partition is imbalanced
-        # (the paper's trigger; Table 1 reports the repartition count).
-        t0 = time.perf_counter()
-        w = jnp.ones(mesh.n_tets, jnp.float32)
-        coords = jnp.asarray(mesh.barycenters())
-        inherited = mesh.leaf_payload.get("parts")
-        repart = True
-        if inherited is not None:
-            cur = float(imbalance(jnp.asarray(inherited), w, p))
-            repart = cur > imbalance_trigger
-        if repart:
-            old = None if inherited is None else jnp.asarray(inherited)
-            br = balancer.balance(w, coords=coords, old_parts=old)
-            parts = br.parts
-            result.n_repartitions += 1
-            step_imb = float(br.imbalance)
-            step_mig = float(br.total_v)
-        else:
-            parts = jnp.asarray(inherited)
-            step_imb, step_mig = cur, 0.0
-        mesh.leaf_payload["parts"] = np.asarray(parts)
-        t_bal = time.perf_counter() - t0
-        old_parts = parts
-
-        st = StepStats(
-            n_tets=mesh.n_tets, n_verts=mesh.n_verts, eta=float(jnp.sum(eta**2) ** 0.5),
-            err_l2=err, cg_iters=int(sol.iters), t_solve=t_solve,
-            t_estimate=t_est, t_refine=t_ref, t_balance=t_bal,
-            imbalance=step_imb, repartitioned=repart,
-            migration_totalv=step_mig)
-        result.stats.append(st)
-        if verbose:
-            print(f"[{step}] nt={st.n_tets:7d} err={err:.3e} eta={st.eta:.3e} "
-                  f"cg={st.cg_iters} imb={st.imbalance:.3f} "
-                  f"solve={t_solve:.2f}s bal={t_bal:.3f}s")
-        if not grew:
-            break
-    result.u, result.mesh = u, mesh
-    return result
+    Equivalent to ``AdaptiveSession(AdaptSpec(problem='helmholtz', ...))
+    .run(mesh)``; kwargs map 1:1 onto spec fields (see ROADMAP's
+    migration guide)."""
+    _warn_deprecated_once("solve_helmholtz_adaptive")
+    spec = AdaptSpec(problem="helmholtz", theta=theta, trigger="imbalance",
+                     imbalance_trigger=imbalance_trigger,
+                     balance=BalanceSpec(p=p, method=method, backend=backend),
+                     backend=backend, max_steps=max_steps, max_tets=max_tets,
+                     tol=tol)
+    return AdaptiveSession(spec, verbose=verbose).run(mesh)
 
 
 def solve_parabolic_adaptive(mesh: Mesh, *, p: int = 16,
@@ -188,80 +691,23 @@ def solve_parabolic_adaptive(mesh: Mesh, *, p: int = 16,
                              tol: float = 1e-8,
                              backend: str = "host",
                              verbose: bool = False) -> AdaptiveResult:
-    """Paper Example 3.2: backward Euler + refine/coarsen each step."""
-    prob = ParabolicProblem()
-    balancer = Balancer.from_spec(
-        BalanceSpec(p=p, method=method, backend=backend))
-    result = AdaptiveResult()
-    old_parts = None
+    """DEPRECATED -- paper Example 3.2 via ``AdaptiveSession``.
 
-    # initial condition: interpolate exact at t=0
-    u = np.asarray(peak_init(mesh, prob))
-    t = 0.0
+    Unlike the old driver, the previous step's partition is threaded into
+    every balance call, so the Oliker--Biswas remap and the migration
+    metrics (``retained`` > 0 after the first step) are live."""
+    _warn_deprecated_once("solve_parabolic_adaptive")
+    spec = AdaptSpec(problem="parabolic", theta=theta,
+                     coarsen_frac=coarsen_frac, trigger="always",
+                     balance=BalanceSpec(p=p, method=method, backend=backend),
+                     backend=backend, dt=dt, n_steps=n_steps,
+                     max_tets=max_tets, tol=tol)
+    return AdaptiveSession(spec, verbose=verbose).run(mesh)
 
-    for step in range(n_steps):
-        t_next = t + dt
 
-        # adapt mesh to the *current* solution before stepping:
-        # coarsen first (vertex ids survive append-only, u stays valid),
-        # then re-estimate on the coarsened mesh and refine.
-        t0 = time.perf_counter()
-        el = build_elements(mesh.verts, mesh.tets)
-        eta = np.asarray(zz_estimate(el, jnp.asarray(u)))
-        cmark = threshold_coarsen_mark(eta, coarsen_frac)
-        coarsen(mesh, cmark)
-        el = build_elements(mesh.verts, mesh.tets)
-        eta = np.asarray(zz_estimate(el, jnp.asarray(u)))
-        marked = doerfler_mark(eta, theta)
-        active_before = np.zeros(mesh.n_verts, bool)
-        active_before[np.unique(mesh.tets)] = True
-        if mesh.n_tets < max_tets:
-            refine(mesh, marked)
-        t_ref = time.perf_counter() - t0
-
-        # transfer u to new mesh: P1 interp = copy at old verts, midpoint avg
-        u = transfer_p1(u, active_before, mesh)
-
-        el = build_elements(mesh.verts, mesh.tets)
-        verts = jnp.asarray(mesh.verts)
-        bverts = mesh.boundary_vertices()
-        free = np.ones(mesh.n_verts, np.float64)
-        free[bverts] = 0.0
-        free = jnp.asarray(free)
-        g = prob.exact(verts, t_next)
-
-        t0 = time.perf_counter()
-        fv = load_vector(el, verts, lambda x: prob.f(x, t_next))
-        rhs = mass_matvec(el, jnp.asarray(u)) / dt + fv
-        sol = solve_dirichlet(el, rhs, g, free, 1.0 / dt, tol=tol)
-        u_new = jax.block_until_ready(sol.x)
-        t_solve = time.perf_counter() - t0
-
-        # DLB
-        t0 = time.perf_counter()
-        w = jnp.ones(mesh.n_tets, jnp.float32)
-        coords = jnp.asarray(mesh.barycenters())
-        br = balancer.balance(w, coords=coords, old_parts=None)
-        old_parts = br.parts
-        t_bal = time.perf_counter() - t0
-        result.n_repartitions += 1
-
-        err = _l2_error(el, mesh.verts, jnp.asarray(u_new),
-                        lambda x: prob.exact(x, t_next))
-        st = StepStats(
-            n_tets=mesh.n_tets, n_verts=mesh.n_verts,
-            eta=float((eta ** 2).sum() ** 0.5), err_l2=err,
-            cg_iters=int(sol.iters), t_solve=t_solve, t_estimate=0.0,
-            t_refine=t_ref, t_balance=t_bal,
-            imbalance=float(br.imbalance), repartitioned=True)
-        result.stats.append(st)
-        if verbose:
-            print(f"[t={t_next:.3f}] nt={st.n_tets:6d} err={err:.3e} "
-                  f"cg={st.cg_iters} solve={t_solve:.2f}s bal={t_bal:.3f}s")
-        u, t = np.asarray(u_new), t_next
-    result.u, result.mesh = jnp.asarray(u), mesh
-    return result
-
+# ---------------------------------------------------------------------------
+# Solution transfer
+# ---------------------------------------------------------------------------
 
 def peak_init(mesh: Mesh, prob: ParabolicProblem) -> jax.Array:
     return prob.exact(jnp.asarray(mesh.verts), 0.0)

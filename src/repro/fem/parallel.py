@@ -46,6 +46,20 @@ from .assemble import P1Elements
 AXIS = "fem"
 
 
+def device_mesh(p: int, *, devices=None) -> JMesh:
+    """1-D jax device mesh over the first ``p`` devices on axis ``AXIS``.
+
+    The single construction point for the FEM layer's device topology
+    (the adaptive session, ``reshard_elements`` and the examples all go
+    through here)."""
+    devs = jax.devices() if devices is None else list(devices)
+    if len(devs) < p:
+        raise ValueError(f"need {p} devices for the FEM mesh, have "
+                         f"{len(devs)} (set "
+                         "--xla_force_host_platform_device_count)")
+    return JMesh(np.array(devs[:p]), (AXIS,))
+
+
 class ShardedElements(NamedTuple):
     tets: jax.Array    # (p, C, 4) int32, padded with 0
     grads: jax.Array   # (p, C, 4, 3)
@@ -145,7 +159,7 @@ def reshard_elements(el: P1Elements, coords: jax.Array, p: int, *,
             spec = BalanceSpec(p=p, method="hsfc", backend="sharded")
         balancer = Balancer.from_spec(spec)
     if mesh is None:
-        mesh = JMesh(np.array(jax.devices()[:p]), (AXIS,))
+        mesh = device_mesh(p)
     w = jnp.ones(el.tets.shape[0], jnp.float32)
     res = balancer.balance(w, coords=coords, old_parts=old_parts)
     sel = shard_elements_on_device(el, res.parts, p, mesh)

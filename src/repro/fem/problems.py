@@ -1,4 +1,12 @@
-"""The paper's two numerical examples as problem definitions.
+"""The paper's two numerical examples as registered problem definitions.
+
+``ProblemSetup`` + the problem registry let ``repro.fem.adapt``'s
+``AdaptiveSession`` resolve an ``AdaptSpec.problem`` name into everything
+the adaptive loop needs: a problem object (coefficients, exact solution,
+source term), its kind (stationary vs parabolic -- selects the solve
+stage variant), a default mesh factory, and the paper's marking defaults.
+Register additional problems with ``register_problem`` -- no driver code
+changes needed.
 
 Example 3.1: Helmholtz with Dirichlet BCs on the long cylinder Omega_1
     -Delta u + u = f,   u = cos(2 pi x) cos(2 pi y) cos(2 pi z)
@@ -14,13 +22,64 @@ Example 3.2: linear parabolic problem on (0,1)^3, T = [0,1]
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 TWO_PI = 2.0 * jnp.pi
+
+PROBLEM_KINDS = ("stationary", "parabolic")
+
+
+# ---------------------------------------------------------------------------
+# Problem registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ProblemSetup:
+    """Everything the adaptive session needs to run one named problem.
+
+    ``kind`` selects the solve-stage variant ('stationary' -> one
+    Dirichlet solve per adaptive step; 'parabolic' -> backward Euler,
+    adapt-transfer-solve per time step).  ``theta`` / ``coarsen_frac`` /
+    ``max_tets`` are the paper's marking defaults for this example --
+    ``AdaptSpec.for_problem`` seeds a spec from them.
+    """
+    name: str
+    kind: str                              # 'stationary' | 'parabolic'
+    make: Callable[[], Any]                # () -> problem object
+    default_mesh: Callable[[], "Any"]      # () -> repro.fem.mesh.Mesh
+    theta: float = 0.5
+    coarsen_frac: float = 0.0
+    max_tets: int = 200_000
+
+    def __post_init__(self):
+        if self.kind not in PROBLEM_KINDS:
+            raise ValueError(f"unknown problem kind {self.kind!r}; "
+                             f"choose from {PROBLEM_KINDS}")
+
+
+_PROBLEMS: Dict[str, ProblemSetup] = {}
+
+
+def register_problem(setup: ProblemSetup) -> ProblemSetup:
+    """Register (or replace) a named problem setup."""
+    _PROBLEMS[setup.name] = setup
+    return setup
+
+
+def get_problem(name: str) -> ProblemSetup:
+    try:
+        return _PROBLEMS[name]
+    except KeyError:
+        raise ValueError(f"unknown problem {name!r}; "
+                         f"registered: {problem_names()}") from None
+
+
+def problem_names():
+    return sorted(_PROBLEMS)
 
 
 # ---------------------------------------------------------------------------
@@ -73,3 +132,28 @@ class ParabolicProblem:
     t_end: float = 1.0
     exact: Callable = staticmethod(peak_exact)
     f: Callable = staticmethod(peak_f)
+
+
+# ---------------------------------------------------------------------------
+# Registrations: the paper's two examples
+# ---------------------------------------------------------------------------
+
+def _helmholtz_mesh():
+    from .mesh import cylinder_mesh
+    return cylinder_mesh(8, 2, length=4.0, radius=0.5)
+
+
+def _parabolic_mesh():
+    from .mesh import unit_cube_mesh
+    return unit_cube_mesh(3)
+
+
+register_problem(ProblemSetup(
+    name="helmholtz", kind="stationary", make=HelmholtzProblem,
+    default_mesh=_helmholtz_mesh, theta=0.5, coarsen_frac=0.0,
+    max_tets=200_000))
+
+register_problem(ProblemSetup(
+    name="parabolic", kind="parabolic", make=ParabolicProblem,
+    default_mesh=_parabolic_mesh, theta=0.4, coarsen_frac=0.15,
+    max_tets=120_000))

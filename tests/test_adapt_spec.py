@@ -1,0 +1,265 @@
+"""AdaptSpec / AdaptiveSession API: spec round-tripping (nested
+BalanceSpec included), static-pytree hashability, stage-registry error
+surfaces, loop-template parity with the legacy drivers, trigger
+policies, the parabolic old_parts regression, hooks, custom stage
+variants, and the sharded backend."""
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BalanceSpec
+from repro.fem import (AdaptSpec, AdaptiveSession, adapt_stage_variants,
+                       cylinder_mesh, get_adapt_stage, get_problem,
+                       problem_names, register_adapt_stage,
+                       resolve_adapt_variants, solve_helmholtz_adaptive,
+                       solve_parabolic_adaptive, unit_cube_mesh)
+from repro.fem.adapt import _ADAPT_REGISTRY, _reset_deprecation_warning
+
+needs8 = pytest.mark.skipif(jax.device_count() < 8,
+                            reason="needs 8 placeholder devices")
+
+
+def _tiny_helmholtz(**kw):
+    base = dict(problem="helmholtz", max_steps=3, max_tets=4000, tol=1e-6,
+                balance=BalanceSpec(p=8, method="hsfc"))
+    base.update(kw)
+    return AdaptSpec(**base)
+
+
+def _tiny_mesh():
+    return cylinder_mesh(4, 2, length=2.0, radius=0.5)
+
+
+# ---------------------------------------------------------------------------
+# spec round-tripping / validation
+# ---------------------------------------------------------------------------
+
+def test_adapt_spec_roundtrips_with_nested_balance_spec():
+    spec = AdaptSpec(problem="parabolic", theta=0.4, coarsen_frac=0.15,
+                     trigger="always", dt=0.02, n_steps=5, max_tets=9000,
+                     balance=BalanceSpec(p=8, method="msfc", oneD="ksection"))
+    d = spec.to_dict()
+    assert d["balance"]["method"] == "msfc"        # nested spec -> plain dict
+    # JSON-safe and lossless, nested BalanceSpec reconstructed
+    back = AdaptSpec.from_dict(json.loads(json.dumps(d)))
+    assert back == spec and isinstance(back.balance, BalanceSpec)
+    assert spec.replace(theta=0.6).theta == 0.6 and spec.theta == 0.4
+
+
+def test_adapt_spec_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown AdaptSpec fields"):
+        AdaptSpec.from_dict({"problem": "helmholtz", "fanciness": 11})
+
+
+@pytest.mark.parametrize("bad", [
+    dict(trigger="sometimes"), dict(backend="tpu_pod"), dict(theta=0.0),
+    dict(theta=1.5), dict(dt=-1.0), dict(dt=0.1), dict(n_steps=3),
+    dict(coarsen_frac=-0.1), dict(max_steps=0), dict(balance="hsfc"),
+])
+def test_adapt_spec_validates_fields(bad):
+    with pytest.raises(ValueError):
+        AdaptSpec(**bad)
+
+
+def test_adapt_spec_is_static_pytree_and_hashable():
+    spec = AdaptSpec(balance=BalanceSpec(p=4))
+    leaves, treedef = jax.tree_util.tree_flatten(spec)
+    assert leaves == []                       # all-static: crosses jit free
+    assert jax.tree_util.tree_unflatten(treedef, leaves) == spec
+    assert hash(spec) == hash(AdaptSpec(balance=BalanceSpec(p=4)))
+
+
+def test_for_problem_seeds_paper_defaults():
+    spec = AdaptSpec.for_problem("parabolic", dt=0.02, n_steps=3)
+    assert spec.theta == 0.4 and spec.coarsen_frac == 0.15
+    assert spec.trigger == "always" and spec.max_tets == 120_000
+    h = AdaptSpec.for_problem("helmholtz")
+    assert h.stationary and h.trigger == "imbalance" and h.theta == 0.5
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+def test_resolve_variants_per_problem_kind():
+    v = resolve_adapt_variants(AdaptSpec.for_problem("helmholtz"))
+    assert v == {"solve": "stationary", "estimate": "zz",
+                 "mark": "doerfler", "adapt_mesh": "refine",
+                 "transfer": None, "balance": "host"}
+    v = resolve_adapt_variants(
+        AdaptSpec.for_problem("parabolic", backend="sharded"))
+    assert v["solve"] == "backward_euler"
+    assert v["adapt_mesh"] == "coarsen_refine"
+    assert v["transfer"] == "p1" and v["balance"] == "sharded"
+
+
+def test_adapt_registry_error_surfaces():
+    assert "zz" in adapt_stage_variants("estimate")
+    assert {"host", "sharded"} <= set(adapt_stage_variants("balance"))
+    with pytest.raises(ValueError, match="available"):
+        get_adapt_stage("solve", "spectral")
+    with pytest.raises(ValueError, match="unknown adapt stage"):
+        register_adapt_stage("precondition", "ilu")
+
+
+def test_problem_registry_and_kind_mismatch():
+    assert {"helmholtz", "parabolic"} <= set(problem_names())
+    assert get_problem("parabolic").kind == "parabolic"
+    with pytest.raises(ValueError, match="registered"):
+        get_problem("navier_stokes")
+    with pytest.raises(ValueError, match="time-dependent"):
+        AdaptiveSession(AdaptSpec(problem="parabolic"))
+    with pytest.raises(ValueError, match="stationary"):
+        AdaptiveSession(AdaptSpec(problem="helmholtz", dt=0.1, n_steps=2))
+
+
+def test_custom_stage_variant_is_selectable():
+    @register_adapt_stage("mark", "topfrac")
+    def _mark_topfrac(session, state):
+        eta = np.asarray(state.eta)
+        k = max(1, int(0.1 * eta.size))
+        marked = np.zeros(eta.size, bool)
+        marked[np.argsort(-eta)[:k]] = True
+        state.marked = marked
+
+    try:
+        mesh = _tiny_mesh()
+        n0 = mesh.n_tets
+        res = AdaptiveSession(
+            _tiny_helmholtz(mark="topfrac", max_steps=2)).run(mesh)
+        assert len(res.stats) == 2
+        assert res.stats[0].n_tets > n0        # the custom marking refined
+    finally:
+        del _ADAPT_REGISTRY[("mark", "topfrac")]
+
+
+# ---------------------------------------------------------------------------
+# session behavior
+# ---------------------------------------------------------------------------
+
+def test_session_matches_legacy_helmholtz_driver():
+    res_s = AdaptiveSession(_tiny_helmholtz()).run(_tiny_mesh())
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res_l = solve_helmholtz_adaptive(_tiny_mesh(), p=8, method="hsfc",
+                                         max_steps=3, max_tets=4000,
+                                         tol=1e-6)
+    assert len(res_s.stats) == len(res_l.stats)
+    assert res_s.n_repartitions == res_l.n_repartitions
+    for a, b in zip(res_s.stats, res_l.stats):
+        assert (a.n_tets, a.n_verts, a.cg_iters) == (b.n_tets, b.n_verts,
+                                                     b.cg_iters)
+        assert a.repartitioned == b.repartitioned
+        assert a.eta == pytest.approx(b.eta, rel=1e-9)
+        assert a.err_l2 == pytest.approx(b.err_l2, rel=1e-9)
+        assert a.imbalance == pytest.approx(b.imbalance, rel=1e-9)
+        assert a.migration_totalv == pytest.approx(b.migration_totalv,
+                                                   rel=1e-9)
+
+
+def test_session_hooks_fire_per_step_and_stage():
+    stages, steps = [], []
+    sess = AdaptiveSession(_tiny_helmholtz(max_steps=2),
+                           on_step=lambda st, state: steps.append(st),
+                           on_stage=lambda s, v, dt: stages.append((s, v)))
+    res = sess.run(_tiny_mesh())
+    assert len(steps) == len(res.stats) == 2
+    assert ("solve", "stationary") in stages
+    assert ("balance", "host") in stages
+    assert ("estimate", "zz") in stages
+
+
+def test_trigger_policies():
+    always = AdaptiveSession(_tiny_helmholtz(trigger="always")).run(
+        _tiny_mesh())
+    assert always.n_repartitions == len(always.stats)
+    never = AdaptiveSession(_tiny_helmholtz(trigger="never")).run(
+        _tiny_mesh())
+    assert never.n_repartitions == 1        # partitions once, then keeps it
+    assert never.stats[0].repartitioned
+    assert not any(s.repartitioned for s in never.stats[1:])
+    imb = AdaptiveSession(_tiny_helmholtz(trigger="imbalance")).run(
+        _tiny_mesh())
+    assert 1 <= imb.n_repartitions <= len(imb.stats)
+    # every step reports a finite imbalance, repartitioned or not
+    assert all(np.isfinite(s.imbalance) for s in imb.stats)
+
+
+def test_default_mesh_comes_from_problem_registration():
+    res = AdaptiveSession(_tiny_helmholtz(max_steps=1)).run()
+    assert res.mesh is not None and res.stats[0].n_tets > 0
+
+
+def test_parabolic_threads_old_parts_regression():
+    """The old driver passed old_parts=None every step, killing the
+    Oliker--Biswas remap and migration metrics on the time-dependent
+    loop.  The session threads the previous partition by construction:
+    after step 0 the remap retains weight."""
+    spec = AdaptSpec.for_problem("parabolic", dt=0.02, n_steps=3,
+                                 max_tets=9000, tol=1e-6,
+                                 balance=BalanceSpec(p=4, method="hsfc"))
+    res = AdaptiveSession(spec).run(unit_cube_mesh(2))
+    assert all(s.repartitioned for s in res.stats)
+    assert res.stats[0].migration_retained == 0.0   # nothing to inherit yet
+    assert all(s.migration_retained > 0 for s in res.stats[1:])
+    # and the legacy wrapper now inherits the fix
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res_l = solve_parabolic_adaptive(unit_cube_mesh(2), p=4, dt=0.02,
+                                         n_steps=2, max_tets=9000, tol=1e-6)
+    assert res_l.stats[1].migration_retained > 0
+
+
+def test_legacy_drivers_warn_exactly_once_and_delegate():
+    _reset_deprecation_warning()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        r1 = solve_helmholtz_adaptive(_tiny_mesh(), p=4, max_steps=1,
+                                      max_tets=2000, tol=1e-5)
+        r2 = solve_parabolic_adaptive(unit_cube_mesh(1), p=2, dt=0.05,
+                                      n_steps=1, max_tets=2000, tol=1e-5)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "AdaptSpec" in str(dep[0].message)
+    # wrappers delegate: results carry the session's resolved spec
+    assert r1.spec.problem == "helmholtz" and r1.spec.trigger == "imbalance"
+    assert r2.spec.problem == "parabolic" and r2.spec.trigger == "always"
+
+
+# ---------------------------------------------------------------------------
+# sharded backend
+# ---------------------------------------------------------------------------
+
+@needs8
+def test_session_sharded_matches_host_stats():
+    spec = _tiny_helmholtz(max_steps=2)
+    res_h = AdaptiveSession(spec).run(_tiny_mesh())
+    res_s = AdaptiveSession(spec.replace(backend="sharded")).run(_tiny_mesh())
+    assert len(res_h.stats) == len(res_s.stats)
+    for a, b in zip(res_h.stats, res_s.stats):
+        assert (a.n_tets, a.n_verts) == (b.n_tets, b.n_verts)
+        assert a.repartitioned == b.repartitioned
+        assert a.imbalance == pytest.approx(b.imbalance, rel=1e-5)
+        assert a.err_l2 == pytest.approx(b.err_l2, rel=1e-5)
+    # element payloads were re-packed on device: volume conserved
+    assert res_s.sharded is not None and res_s.sharded.p == 8
+    vol = float(jnp.sum(res_s.sharded.vol))
+    assert vol == pytest.approx(float(res_s.mesh.volumes().sum()), rel=1e-5)
+
+
+@needs8
+def test_session_sharded_parabolic_runs():
+    spec = AdaptSpec.for_problem("parabolic", dt=0.02, n_steps=2,
+                                 max_tets=6000, tol=1e-6, backend="sharded",
+                                 balance=BalanceSpec(p=8, method="hsfc"))
+    res = AdaptiveSession(spec).run(unit_cube_mesh(2))
+    assert len(res.stats) == 2
+    assert all(np.isfinite(s.err_l2) for s in res.stats)
+    assert res.stats[1].migration_retained > 0
+    assert res.sharded is not None
+    vol = float(jnp.sum(res.sharded.vol))
+    assert vol == pytest.approx(1.0, rel=1e-5)      # unit cube

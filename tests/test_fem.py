@@ -135,6 +135,75 @@ def test_adaptive_helmholtz_reduces_error():
     assert all(s.imbalance < 1.25 for s in r.stats)
 
 
+def test_transfer_p1_resolves_midpoint_chains():
+    """Nested bisection: a new midpoint whose endpoint is itself a new
+    midpoint must be resolved through the chain (one pass in id order),
+    which is exact for P1 functions."""
+    from repro.fem.adapt import transfer_p1
+    m = unit_cube_mesh(1)
+    lin = lambda v: 1.0 + 2.0 * v[:, 0] - 0.5 * v[:, 1] + 3.0 * v[:, 2]
+    active = np.zeros(m.n_verts, bool)
+    active[np.unique(m.tets)] = True
+    u = lin(m.verts)
+    for _ in range(4):                      # 4 rounds: midpoint edges get
+        refine(m, np.ones(m.n_tets, bool))  # bisected themselves (chains)
+    old_nv = active.shape[0]
+    needs = np.ones(m.n_verts, bool)
+    needs[:old_nv] = ~active
+    pairs = np.array([[k >> 32, k & 0xFFFFFFFF, v]
+                      for k, v in m.edge_mid.items() if needs[v]], np.int64)
+    # the scenario under test actually occurs: some needed midpoint has a
+    # needed endpoint (a chain)
+    assert (needs[pairs[:, 0]] | needs[pairs[:, 1]]).any()
+    u2 = transfer_p1(u, active, m)
+    np.testing.assert_allclose(u2, lin(m.verts), atol=1e-12)
+
+
+def test_coarsen_refine_roundtrip_preserves_activity():
+    """Coarsen-then-refine round trip: re-refining exactly the restored
+    parents reproduces the mesh -- element count, volume, and the
+    *geometric* vertex-activity set (new midpoints may get fresh vertex
+    ids; orphaned old midpoints stay inactive) -- and transfer_p1 across
+    the round trip is exact for P1 functions."""
+    from repro.fem.adapt import transfer_p1
+    rng = np.random.default_rng(3)
+    m = unit_cube_mesh(2)
+    refine(m, rng.random(m.n_tets) < 0.4)
+    leaves1 = m.leaf_nodes.copy()
+    n1 = m.n_tets
+    act1 = np.zeros(m.n_verts, bool)
+    act1[np.unique(m.tets)] = True
+    pts1 = m.verts[act1]
+    lin = lambda v: 1.0 + 2.0 * v[:, 0] - 0.5 * v[:, 1] + 3.0 * v[:, 2]
+    u = lin(m.verts)
+
+    merged = coarsen(m, np.ones(m.n_tets, bool))
+    assert merged > 0
+    act0 = np.zeros(m.n_verts, bool)
+    act0[np.unique(m.tets)] = True
+
+    # restored parents are exactly the leaves that were not leaves before
+    mask = ~np.isin(m.leaf_nodes, leaves1)
+    assert int(mask.sum()) == merged
+    refine(m, mask)
+
+    assert m.n_tets == n1
+    assert (m.forest.leaves_dfs() == m.leaf_nodes).all()
+    assert abs(m.volumes().sum() - 1.0) < 1e-12
+    act2 = np.zeros(m.n_verts, bool)
+    act2[np.unique(m.tets)] = True
+    pts2 = m.verts[act2]
+    assert pts1.shape == pts2.shape
+    order1 = np.lexsort(pts1.T)
+    order2 = np.lexsort(pts2.T)
+    np.testing.assert_allclose(pts1[order1], pts2[order2], atol=1e-14)
+
+    # values survive the round trip exactly (P1 interpolation is exact
+    # for linear functions; act0 is the pre-refine activity mask)
+    u2 = transfer_p1(u, act0, m)
+    np.testing.assert_allclose(u2[act2], lin(m.verts)[act2], atol=1e-12)
+
+
 def test_parabolic_tracks_peak():
     from repro.fem.adapt import solve_parabolic_adaptive
     m = unit_cube_mesh(3)
