@@ -43,10 +43,12 @@ STEPS = 6
 SHARDED_METHODS = ("msfc", "hsfc")   # SFC family only on the device path
 
 
-def run(backend: str = "host", oneD: str = "sorted"):
+def run(backend: str = "host", oneD: str = "sorted", quick: bool = False):
     import jax
+    n = 20_000 if quick else N
+    steps = 3 if quick else STEPS
     rng = np.random.default_rng(0)
-    coords = jnp.asarray(rng.random((N, 3)).astype(np.float32))
+    coords = jnp.asarray(rng.random((n, 3)).astype(np.float32))
     if backend == "sharded":
         p = min(P, jax.device_count())
         methods = list(SHARDED_METHODS)
@@ -65,7 +67,7 @@ def run(backend: str = "host", oneD: str = "sorted"):
             total_w = 0.0
             t_total = 0.0
             last_imb = float("nan")
-            for step in range(STEPS):
+            for step in range(steps):
                 # moving refinement front: weights peak around a drifting x0
                 x0 = 0.15 * step
                 w = jnp.asarray(
@@ -82,14 +84,14 @@ def run(backend: str = "host", oneD: str = "sorted"):
                 old = res.parts
             tag = "remap" if use_remap else "noremap"
             rows.append((f"fig3.3/dlb/{method}/{tag}/{backend}/time",
-                         t_total / STEPS * 1e6, total_mig))
+                         t_total / steps * 1e6, total_mig))
             records[f"{method}/{tag}"] = {
                 "imbalance": last_imb,
                 "migration_fraction": total_mig / max(total_w, 1e-30),
-                "wall_s_per_step": t_total / STEPS,
+                "wall_s_per_step": t_total / steps,
             }
     meta = {"bench": "dlb", "backend": backend, "oneD": oneD,
-            "p": p, "n": N, "steps": STEPS, "methods": records}
+            "p": p, "n": n, "steps": steps, "methods": records}
     return rows, meta
 
 
@@ -100,10 +102,12 @@ def main():
                     choices=["host", "sharded"])
     ap.add_argument("--oneD", default="sorted",
                     choices=["sorted", "ksection"])
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller problem + fewer steps for CI")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a BENCH_dlb.json record to PATH")
     args = ap.parse_args()
-    rows, meta = run(backend=args.backend, oneD=args.oneD)
+    rows, meta = run(backend=args.backend, oneD=args.oneD, quick=args.quick)
     print("name,us_per_call,derived")
     for row in rows:
         print(f"{row[0]},{row[1]:.1f},{row[2]}")

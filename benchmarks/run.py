@@ -1,15 +1,23 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark harness: python -m benchmarks.run [--quick]
+"""Benchmark harness: python -m benchmarks.run [--quick] [--json DIR]
 
 Each module maps to one paper table/figure (DESIGN.md section 8):
     bench_partition       Fig 3.2   partition time per method/mesh size
+                                    + k-section per-round histogram
     bench_dlb             Fig 3.3   DLB time + migration (remap on/off)
     bench_adaptive_solve  Fig 3.4/3.5 + Table 1   Example 3.1
     bench_parabolic       Tables 2-3               Example 3.2
     bench_aspect_ratio    section 2.2 PHG vs Zoltan box-map quality
     bench_beyond          beyond-paper: MoE dispatch / packing / 1-D
+
+``--json DIR`` aggregates each suite's machine-readable record into
+``DIR/BENCH_<suite>.json`` (suites without a record are skipped) so the
+perf trajectory is comparable across PRs; ``benchmarks/baselines/``
+holds the committed CPU ``--quick`` baseline.
 """
 import argparse
+import json
+import os
 import sys
 
 
@@ -18,32 +26,41 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes for CI")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="aggregate per-suite records into "
+                         "DIR/BENCH_<suite>.json")
     args = ap.parse_args()
 
     from . import (bench_adaptive_solve, bench_aspect_ratio, bench_beyond,
                    bench_dlb, bench_parabolic, bench_partition)
 
+    # every suite yields (rows, json_record_or_None)
     suites = {
-        "partition": lambda: bench_partition.run(
-            sizes=(20_000, 40_000) if args.quick else (20_000, 80_000,
-                                                       320_000)),
-        # [0]: these run() return (rows, json_record)
-        "dlb": lambda: bench_dlb.run()[0],
+        "partition": lambda: bench_partition.run(quick=args.quick),
+        "dlb": lambda: bench_dlb.run(quick=args.quick),
         "adaptive_solve": lambda: bench_adaptive_solve.run(
-            max_steps=3 if args.quick else 4)[0],
+            max_steps=3 if args.quick else 4),
         "parabolic": lambda: bench_parabolic.run(
-            n_steps=2 if args.quick else 3)[0],
-        "aspect_ratio": bench_aspect_ratio.run,
-        "beyond": bench_beyond.run,
+            n_steps=2 if args.quick else 3),
+        "aspect_ratio": lambda: (bench_aspect_ratio.run(), None),
+        "beyond": lambda: (bench_beyond.run(), None),
     }
+    if args.json:
+        os.makedirs(args.json, exist_ok=True)
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
         try:
-            for row in fn():
+            rows, record = fn()
+            for row in rows:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
             sys.stdout.flush()
+            if args.json and record is not None:
+                path = os.path.join(args.json, f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump(record, f, indent=2, sort_keys=True)
+                print(f"# wrote {path}")
         except Exception as e:  # keep the harness running
             print(f"{name}/ERROR,0,{e!r}")
 

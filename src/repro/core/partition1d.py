@@ -72,12 +72,9 @@ def sorted_exact(keys: jax.Array, weights: jax.Array, p: int) -> Partition1DResu
 # k-section search (paper's algorithm, Zoltan-style generalized bisection)
 # ---------------------------------------------------------------------------
 
-def _weight_below(keys: jax.Array, weights: jax.Array, cuts: jax.Array) -> jax.Array:
-    """Total weight of items with key < cut, for each cut.  (m,) -> (m,).
-
-    In the distributed setting this is the quantity reduced across ranks
-    (one histogram allreduce per round); locally it is a searchsorted +
-    segment-sum."""
+def _weight_below_sorted(keys: jax.Array, weights: jax.Array,
+                         cuts: jax.Array) -> jax.Array:
+    """Total weight of items with key < cut, for each SORTED cut."""
     # bucket of each item among sorted cuts: number of cuts <= key
     bucket = jnp.searchsorted(cuts, keys, side="right")  # (n,) in [0, m]
     m = cuts.shape[0]
@@ -86,19 +83,39 @@ def _weight_below(keys: jax.Array, weights: jax.Array, cuts: jax.Array) -> jax.A
     return below
 
 
+def weight_below(keys: jax.Array, weights: jax.Array,
+                 cuts: jax.Array) -> jax.Array:
+    """Total weight of items with key < cut, for cuts in ANY order.
+
+    The reference ``hist_fn`` of the k-section search (searchsorted +
+    segment-sum + cumsum, restored to the caller's cut order).  In the
+    distributed setting this is the quantity reduced across ranks (one
+    histogram allreduce per round); the fused Pallas kernel
+    (``kernels.ksection_hist``) computes the same values in one launch
+    with no sort and no scatter."""
+    order = jnp.argsort(cuts)
+    below_sorted = _weight_below_sorted(keys, weights, cuts[order])
+    return jnp.zeros_like(below_sorted).at[order].set(below_sorted)
+
+
 def ksection_splitters(targets: jax.Array, blo: jax.Array, bhi: jax.Array,
-                       weight_below, *, k: int, iters: int) -> jax.Array:
+                       hist_fn, *, k: int, iters: int) -> jax.Array:
     """The k-section box-shrinking search, shared by every backend.
 
     Maintains a bounding box [blo_i, bhi_i] per splitter a_i (i=1..p-1).
     Each round: subdivide every box into k candidate cuts, measure
-    weight-below each cut via ``weight_below(sorted_cuts)`` (one fused
-    histogram for all (p-1)*k candidates -- host-local, or a psum of
-    per-shard histograms on the sharded backend: the ONLY
-    backend-dependent piece, which is what keeps host and sharded
-    bit-exact by construction), and shrink each box to the subinterval
-    bracketing its target W*i/p.  ``iters`` rounds give k^-iters relative
-    key-space precision.
+    weight-below each cut via ``hist_fn(cuts)`` (one fused histogram for
+    all (p-1)*k candidates -- host-local, a psum of per-shard histograms
+    on the sharded backend, or the fused Pallas kernel: the ONLY
+    backend-dependent piece, which is what keeps every variant bit-exact
+    by construction), and shrink each box to the subinterval bracketing
+    its target W*i/p.  ``iters`` rounds give k^-iters relative key-space
+    precision.
+
+    ``hist_fn`` receives the flattened (box-major, UNSORTED) candidate
+    grid and must return the weight strictly below each cut in the same
+    order -- implementations that need sorted cuts (``weight_below``)
+    sort internally; the Pallas kernel needs no sort at all.
     """
     fdt = targets.dtype
 
@@ -107,12 +124,7 @@ def ksection_splitters(targets: jax.Array, blo: jax.Array, bhi: jax.Array,
         # candidate cuts: k interior points per box -> ((p-1), k)
         frac = jnp.arange(1, k + 1, dtype=fdt) / (k + 1)
         cand = blo[:, None] + (bhi - blo)[:, None] * frac[None, :]
-        flat = jnp.sort(cand.reshape(-1))
-        below_flat = weight_below(flat)
-        # weight-below for each candidate in its original (box, slot) place
-        # via searchsorted into the sorted flat array
-        pos = jnp.searchsorted(flat, cand.reshape(-1), side="left")
-        below = below_flat[pos].reshape(targets.shape[0], k)
+        below = hist_fn(cand.reshape(-1)).reshape(targets.shape[0], k)
         # for splitter i: largest candidate with below <= target -> new lo;
         # smallest candidate with below > target -> new hi
         le = below <= targets[:, None]
@@ -128,12 +140,19 @@ def ksection_splitters(targets: jax.Array, blo: jax.Array, bhi: jax.Array,
     return jnp.sort(0.5 * (blo + bhi))
 
 
-@functools.partial(jax.jit, static_argnames=("p", "k", "iters"))
+@functools.partial(jax.jit, static_argnames=("p", "k", "iters", "hist_fn"))
 def ksection(keys: jax.Array, weights: jax.Array, p: int, *,
              k: int = 8, iters: int = 12,
              lo: Optional[jax.Array] = None,
-             hi: Optional[jax.Array] = None) -> Partition1DResult:
-    """The paper's 1-D partitioner (host/local form of the search)."""
+             hi: Optional[jax.Array] = None,
+             hist_fn=None) -> Partition1DResult:
+    """The paper's 1-D partitioner (host/local form of the search).
+
+    ``hist_fn(keys, weights, cuts) -> below`` overrides the per-round
+    histogram implementation (default: ``weight_below``; pass e.g.
+    ``kernels.ops.ksection_histogram_op`` to run the fused Pallas
+    kernel).  Static under jit -- reuse one callable across calls.
+    """
     fdt = jnp.float32
     kf = keys.astype(fdt)
     w = weights.astype(fdt)
@@ -143,8 +162,9 @@ def ksection(keys: jax.Array, weights: jax.Array, p: int, *,
     blo = jnp.full((p - 1,), jnp.min(kf) if lo is None else lo, dtype=fdt)
     bhi = jnp.full((p - 1,), jnp.max(kf) + 1 if hi is None else hi, dtype=fdt)
 
+    hist = weight_below if hist_fn is None else hist_fn
     splitters = ksection_splitters(
-        targets, blo, bhi, lambda cuts: _weight_below(kf, w, cuts),
+        targets, blo, bhi, lambda cuts: hist(kf, w, cuts),
         k=k, iters=iters)
     parts = jnp.searchsorted(splitters, kf, side="right").astype(jnp.int32)
     part_weights = jax.ops.segment_sum(w, parts, num_segments=p)

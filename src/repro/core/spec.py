@@ -152,8 +152,11 @@ class BalanceSpec(Spec):
     min_capacity       sharded per-device capacity floor
     execute_migration  sharded: ship payloads with the all_to_all
                        executor (False = plan-level metrics only)
-    use_pallas         sharded SFC keys via the Pallas kernel (None =
-                       auto: TPU only)
+    use_pallas         sharded Pallas fast paths: SFC keys kernel and,
+                       with oneD='ksection', the fused per-round
+                       histogram kernel (the 'ksection_pallas' stage
+                       variant).  None = auto: TPU only; True forces
+                       the kernels (interpret mode off-TPU)
     """
     p: int
     method: str = "hsfc"
@@ -289,16 +292,32 @@ def stage_variants(backend: str, stage: str):
     return sorted(v for (b, s, v) in _REGISTRY if b == backend and s == stage)
 
 
+def _oneD_variant(spec: BalanceSpec) -> str:
+    """1-D solver stage variant, honoring the spec's Pallas knob.
+
+    The sharded k-section search has a fused-histogram-kernel variant
+    ('ksection_pallas'); ``use_pallas=None`` auto-selects it on TPU,
+    ``True`` forces it (interpret mode off-TPU), ``False`` keeps the jnp
+    histogram.  Both run the identical box-shrinking search, so the
+    choice never changes results -- only the per-round kernel."""
+    if spec.oneD == "ksection" and spec.backend == "sharded":
+        use = (jax.default_backend() == "tpu" if spec.use_pallas is None
+               else spec.use_pallas)
+        if use:
+            return "ksection_pallas"
+    return spec.oneD
+
+
 def resolve_variants(spec: BalanceSpec) -> Dict[str, Optional[str]]:
     """Map a spec to the stage variants its pipeline uses.
 
     ``keys`` is ``None`` for direct partitioners (rtk operates on the DFS
     weight order, rcb on raw coordinates)."""
     if spec.method in SFC_METHODS:
-        return {"keys": "sfc", "partition1d": spec.oneD,
+        return {"keys": "sfc", "partition1d": _oneD_variant(spec),
                 "remap": "greedy", "migrate": None}
     if spec.method == "linear":
-        return {"keys": "linear", "partition1d": spec.oneD,
+        return {"keys": "linear", "partition1d": _oneD_variant(spec),
                 "remap": "greedy", "migrate": None}
     # direct methods skip the keys stage
     return {"keys": None, "partition1d": spec.method,

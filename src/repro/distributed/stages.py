@@ -13,9 +13,11 @@ collectives only reorder exact additions:
 * sorted      replicated all-gather argsort + Algorithm-1 scan partition
 * ksection    the paper's histogram search with the per-round
               weight-below histogram reduced by one psum of size
-              ``(p-1)*k`` -- the distributed form the paper describes,
-              and the hook where the Pallas fused histogram kernel slots
-              in (ROADMAP)
+              ``(p-1)*k`` -- the distributed form the paper describes.
+              Two variants share the identical search body: 'ksection'
+              (jnp searchsorted+segment_sum hist) and 'ksection_pallas'
+              (the fused streaming kernel in ``kernels.ksection_hist``,
+              selected via ``BalanceSpec(use_pallas=...)``)
 * remap       psum of per-shard similarity rows + redundant greedy solve
 * migrate     plan metrics, plus the all_to_all payload executor
 """
@@ -53,20 +55,15 @@ def build_mesh(spec: BalanceSpec, devices=None) -> Mesh:
 # ---------------------------------------------------------------------------
 
 def _encode_local(spec: BalanceSpec, grid: jax.Array) -> jax.Array:
-    """Per-shard SFC key generation (Pallas fast path, jnp fallback)."""
+    """Per-shard SFC key generation (Pallas fast path, jnp fallback).
+
+    ``sfc_keys_op`` pads the coordinate tile to a block multiple and
+    slices the keys back, so any shard size runs the kernel instead of
+    silently degrading to the jnp path on awkward sizes."""
+    from ..kernels.ops import sfc_keys_op
     curve = "morton" if spec.method == "msfc" else "hilbert"
-    C = grid.shape[0]
-    use_pallas = (jax.default_backend() == "tpu"
-                  if spec.use_pallas is None else spec.use_pallas)
-    if use_pallas and C % 8 == 0:
-        from ..kernels.sfc_keys import sfc_keys_pallas
-        g = grid.astype(jnp.int32)
-        keys = sfc_keys_pallas(g[:, 0], g[:, 1], g[:, 2], curve=curve,
-                               bits=spec.sfc_bits, block=min(1024, C))
-        return keys.astype(jnp.uint32)
-    if curve == "hilbert":
-        return _sfc.hilbert_encode(grid, spec.sfc_bits)
-    return _sfc.morton_encode(grid, spec.sfc_bits)
+    return sfc_keys_op(grid, curve=curve, bits=spec.sfc_bits,
+                       use_pallas=spec.use_pallas)
 
 
 @register_stage("sharded", "keys", "sfc")
@@ -110,33 +107,69 @@ def _partition_sorted_sharded(spec: BalanceSpec, keys, weights, coords, *,
     return jax.lax.dynamic_slice(parts_g, (rank * C,), (C,))
 
 
-@register_stage("sharded", "partition1d", "ksection")
-def _partition_ksection_sharded(spec: BalanceSpec, keys, weights, coords, *,
-                                axis: str):
-    """The paper's k-section histogram search, distributed.
+def ksection_splitters_sharded(spec: BalanceSpec, kf, w, *, axis: str,
+                               hist_local):
+    """Shared shard-local body of the distributed k-section search.
 
-    Identical iteration math to ``core.partition1d.ksection``; the only
+    Identical iteration math to ``core.partition1d.ksection``
+    (``ksection_splitters`` is literally the same function); the only
     collective is ONE psum of the ``(p-1)*k`` candidate-cut weight
     histogram per round (the paper's streaming/low-memory property -- no
-    global sort, no gathered key array).  Bit-exact against the host
-    solver on integer-valued weights because the psum only reorders exact
-    additions."""
+    global sort, no gathered key array), and the only variant-dependent
+    piece is ``hist_local(cuts) -> below`` (jnp reference or the fused
+    Pallas kernel).  Bit-exact across variants on integer-valued weights
+    because psum and tile accumulation only reorder exact additions."""
     p = spec.p
     fdt = jnp.float32
-    kf = keys.astype(fdt)
-    w = weights.astype(fdt)
     total = jax.lax.psum(jnp.sum(w), axis)
     targets = total * jnp.arange(1, p, dtype=fdt) / p
 
     blo = jnp.full((p - 1,), jax.lax.pmin(jnp.min(kf), axis), dtype=fdt)
     bhi = jnp.full((p - 1,), jax.lax.pmax(jnp.max(kf), axis) + 1, dtype=fdt)
 
-    splitters = _p1d.ksection_splitters(
+    return _p1d.ksection_splitters(
         targets, blo, bhi,
         # local histogram contribution, reduced once across shards
-        lambda cuts: jax.lax.psum(_p1d._weight_below(kf, w, cuts), axis),
+        lambda cuts: jax.lax.psum(hist_local(cuts), axis),
         k=spec.k, iters=spec.iters)
+
+
+def _ksection_parts(spec: BalanceSpec, keys, weights, *, axis: str,
+                    make_hist):
+    fdt = jnp.float32
+    kf = keys.astype(fdt)
+    w = weights.astype(fdt)
+    splitters = ksection_splitters_sharded(spec, kf, w, axis=axis,
+                                           hist_local=make_hist(kf, w))
     return jnp.searchsorted(splitters, kf, side="right").astype(jnp.int32)
+
+
+@register_stage("sharded", "partition1d", "ksection")
+def _partition_ksection_sharded(spec: BalanceSpec, keys, weights, coords, *,
+                                axis: str):
+    """The paper's k-section histogram search, distributed (jnp hist)."""
+    return _ksection_parts(
+        spec, keys, weights, axis=axis,
+        make_hist=lambda kf, w: lambda cuts: _p1d.weight_below(kf, w, cuts))
+
+
+@register_stage("sharded", "partition1d", "ksection_pallas")
+def _partition_ksection_pallas_sharded(spec: BalanceSpec, keys, weights,
+                                       coords, *, axis: str):
+    """k-section search with the fused Pallas histogram kernel.
+
+    Same search as the 'ksection' variant; the per-round (p-1)*k
+    weight-below histogram runs as ONE kernel launch (streaming
+    compare-accumulate over VMEM-resident cuts) instead of searchsorted
+    + segment_sum.  Off-TPU the kernel runs under the Pallas interpreter
+    so the variant stays testable on CPU CI.  Selected by
+    ``BalanceSpec(oneD='ksection', backend='sharded', use_pallas=...)``."""
+    from ..kernels.ops import ksection_histogram_op
+    interpret = jax.default_backend() != "tpu"
+    return _ksection_parts(
+        spec, keys, weights, axis=axis,
+        make_hist=lambda kf, w: lambda cuts: ksection_histogram_op(
+            kf, w, cuts, use_pallas=True, interpret=interpret))
 
 
 # ---------------------------------------------------------------------------

@@ -11,10 +11,14 @@ Kernels:
                    partitioning hot spot (bit ops over VMEM tiles)
   prefix_scan      blocked exclusive prefix sum -- Algorithm 1's S_i /
                    MoE capacity offsets (VMEM carry across grid steps)
+  ksection_hist    fused k-section candidate-cut weight histogram --
+                   the distributed partitioner's per-round reduction
+                   (streaming compare-accumulate, no sort/scatter)
   flash_attention  blocked online-softmax attention (causal/SWA/GQA) --
                    the LM substrate's dominant compute at 32k prefill
 
 All validated in interpret mode on CPU (tests/test_kernels.py) over
 shape/dtype sweeps; compiled BlockSpecs target the TPU MXU/VPU layouts.
 """
-from .ops import exclusive_scan_op, flash_attention_op, sfc_keys_op
+from .ops import (exclusive_scan_op, flash_attention_op,
+                  ksection_histogram_op, sfc_keys_op)

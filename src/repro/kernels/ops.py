@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .flash_attention import flash_attention_pallas
+from .ksection_hist import ksection_histogram_pallas
 from .prefix_scan import exclusive_scan_pallas
 from .sfc_keys import sfc_keys_pallas
 
@@ -32,18 +33,25 @@ def _pad_to(x: jax.Array, mult: int):
 
 def sfc_keys_op(grid: jax.Array, *, curve: str = "hilbert", bits: int = 10,
                 use_pallas: Optional[bool] = None,
-                interpret: bool = False) -> jax.Array:
-    """(n, 3) integer grid coords -> (n,) keys."""
+                interpret: bool = False, block: int = 1024) -> jax.Array:
+    """(n, 3) integer grid coords -> (n,) keys.
+
+    Any n runs the kernel: coords are padded to a multiple of the
+    (8-aligned, never-larger-than-needed) block and the keys sliced
+    back."""
     if use_pallas is None:
         use_pallas = _ON_TPU
     if not use_pallas:
         fn = _ref.hilbert_keys_ref if curve == "hilbert" else _ref.morton_keys_ref
         return fn(grid.astype(jnp.uint32), bits)
     g = grid.astype(jnp.int32)
-    x, n = _pad_to(g[:, 0], 1024)
-    y, _ = _pad_to(g[:, 1], 1024)
-    z, _ = _pad_to(g[:, 2], 1024)
-    keys = sfc_keys_pallas(x, y, z, curve=curve, bits=bits,
+    if g.shape[0] == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    block = min(block, g.shape[0] + (-g.shape[0]) % 8)
+    x, n = _pad_to(g[:, 0], block)
+    y, _ = _pad_to(g[:, 1], block)
+    z, _ = _pad_to(g[:, 2], block)
+    keys = sfc_keys_pallas(x, y, z, curve=curve, bits=bits, block=block,
                            interpret=interpret or not _ON_TPU)
     return keys[:n].astype(jnp.uint32)
 
@@ -57,6 +65,28 @@ def exclusive_scan_op(x: jax.Array, *, use_pallas: Optional[bool] = None,
         return _ref.exclusive_scan_ref(x)
     xp, n = _pad_to(x.astype(jnp.float32), 2048)
     return exclusive_scan_pallas(xp, interpret=interpret or not _ON_TPU)[:n]
+
+
+def ksection_histogram_op(keys: jax.Array, weights: jax.Array,
+                          cuts: jax.Array, *,
+                          use_pallas: Optional[bool] = None,
+                          interpret: bool = False,
+                          block: int = 1024) -> jax.Array:
+    """Per-round k-section histogram: weight strictly below each of the
+    (m,) candidate cuts (any order).  (n,),(n,),(m,) -> (m,) float32.
+
+    The fused kernel replaces searchsorted + an (m+1)-segment
+    segment_sum + cumsum with one streaming compare-accumulate launch;
+    off-TPU the oracle runs (or the kernel under the Pallas interpreter
+    when requested).  Exact on integer-valued weights either way, so the
+    k-section search stays bit-identical across implementations."""
+    if use_pallas is None:
+        use_pallas = _ON_TPU
+    if not use_pallas:
+        return _ref.ksection_histogram_ref(keys, weights, cuts)
+    return ksection_histogram_pallas(keys, weights, cuts,
+                                     interpret=interpret or not _ON_TPU,
+                                     block=block)
 
 
 def flash_attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..core import partition1d as _p1d
 from ..core import sfc as _sfc
 
 
@@ -22,6 +23,19 @@ def hilbert_keys_ref(grid: jax.Array, bits: int = 10) -> jax.Array:
 def exclusive_scan_ref(x: jax.Array) -> jax.Array:
     """Exclusive prefix sum along the last axis (Algorithm 1's S_i)."""
     return jnp.cumsum(x, axis=-1) - x
+
+
+# --- ksection_hist ---------------------------------------------------------
+
+def ksection_histogram_ref(keys: jax.Array, weights: jax.Array,
+                           cuts: jax.Array) -> jax.Array:
+    """Weight strictly below each candidate cut (cuts in any order).
+
+    The searchsorted + segment_sum + cumsum baseline the fused kernel
+    replaces -- delegated to ``core.partition1d.weight_below`` so the
+    oracle IS the production fallback path."""
+    return _p1d.weight_below(keys, weights.astype(jnp.float32),
+                             cuts).astype(jnp.float32)
 
 
 # --- flash_attention -------------------------------------------------------

@@ -244,6 +244,96 @@ def test_sharded_ksection_no_value_error_and_host_parity():
 
 
 # ---------------------------------------------------------------------------
+# ksection_pallas stage variant: fused-histogram search, bit-exact parity
+# ---------------------------------------------------------------------------
+
+def test_use_pallas_selects_ksection_pallas_variant():
+    """BalanceSpec(use_pallas=...) picks the stage variant; host backend
+    and use_pallas=False keep the jnp search."""
+    from repro.core import BalanceSpec, resolve_variants
+    spec = BalanceSpec(p=8, method="hsfc", oneD="ksection",
+                       backend="sharded")
+    assert resolve_variants(
+        spec.replace(use_pallas=True))["partition1d"] == "ksection_pallas"
+    assert resolve_variants(
+        spec.replace(use_pallas=False))["partition1d"] == "ksection"
+    assert resolve_variants(
+        spec.replace(backend="host",
+                     use_pallas=True))["partition1d"] == "ksection"
+
+
+@needs8
+def test_ksection_splitters_bit_exact_host_jnp_pallas():
+    """The box-shrinking search yields BIT-identical splitters with all
+    three hist_fn bindings: host weight_below, sharded-jnp psum, and the
+    sharded fused Pallas kernel (interpret mode) -- integer weights make
+    every histogram an exact sum, and the search math is shared."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.core import BalanceSpec
+    from repro.core import partition1d as p1d
+    from repro.distributed import stages as dstages
+    from repro.distributed.sharding import shard_map
+    from repro.kernels.ops import ksection_histogram_op
+
+    p, k, iters, n = 8, 4, 10, 4096
+    rng = np.random.default_rng(7)
+    keys = jnp.asarray(rng.random(n).astype(np.float32))
+    w = jnp.asarray(rng.integers(1, 10, n).astype(np.float32))
+    spec = BalanceSpec(p=p, method="hsfc", oneD="ksection", k=k,
+                       iters=iters, backend="sharded")
+
+    host = p1d.ksection(keys, w, p, k=k, iters=iters).splitters
+
+    mesh = Mesh(np.array(jax.devices()[:p]), ("x",))
+
+    def sharded_splitters(make_hist):
+        def body(kl, wl):
+            kf = kl.astype(jnp.float32)
+            wf = wl.astype(jnp.float32)
+            return dstages.ksection_splitters_sharded(
+                spec, kf, wf, axis="x", hist_local=make_hist(kf, wf))
+        try:
+            fn = shard_map(body, mesh=mesh, in_specs=(P("x"), P("x")),
+                           out_specs=P(), check_rep=False)
+        except TypeError:
+            fn = shard_map(body, mesh=mesh, in_specs=(P("x"), P("x")),
+                           out_specs=P(), check_vma=False)
+        return fn(keys, w)
+
+    s_jnp = sharded_splitters(
+        lambda kf, wf: lambda cuts: p1d.weight_below(kf, wf, cuts))
+    s_pal = sharded_splitters(
+        lambda kf, wf: lambda cuts: ksection_histogram_op(
+            kf, wf, cuts, use_pallas=True, interpret=True))
+    assert (np.asarray(host) == np.asarray(s_jnp)).all()
+    assert (np.asarray(host) == np.asarray(s_pal)).all()
+
+
+@needs8
+def test_ksection_pallas_balancer_end_to_end_parity():
+    """Balancer.from_spec resolves the 'ksection_pallas' variant and the
+    whole pipeline (incl. incremental remap + migration metrics) stays
+    bit-exact vs the host ksection path."""
+    from repro.core import Balancer, BalanceSpec
+    coords, w = _data(13, 5000)
+    p = 8
+    spec = BalanceSpec(p=p, method="hsfc", oneD="ksection")
+    host_bal = Balancer.from_spec(spec)
+    pal_bal = Balancer.from_spec(
+        spec.replace(backend="sharded", use_pallas=True))
+    assert pal_bal._variants["partition1d"] == "ksection_pallas"
+    h1 = host_bal.balance(w, coords=coords)
+    s1 = pal_bal.balance(w, coords=coords)
+    assert (np.asarray(h1.parts) == np.asarray(s1.parts)).all()
+    w2 = w.at[:512].set(w[:512] + 2.0)
+    h2 = host_bal.balance(w2, coords=coords, old_parts=h1.parts)
+    s2 = pal_bal.balance(w2, coords=coords, old_parts=s1.parts)
+    assert (np.asarray(h2.parts) == np.asarray(s2.parts)).all()
+    assert float(h2.total_v) == float(s2.total_v)
+    assert float(h2.retained) == float(s2.retained)
+
+
+# ---------------------------------------------------------------------------
 # FEM wiring: adaptive loop with backend='sharded'
 # ---------------------------------------------------------------------------
 

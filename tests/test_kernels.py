@@ -6,9 +6,12 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ksection_hist import (ksection_histogram_jnp,
+                                         ksection_histogram_pallas)
 from repro.kernels.prefix_scan import exclusive_scan_pallas
 from repro.kernels.sfc_keys import sfc_keys_pallas
-from repro.kernels.ops import exclusive_scan_op, flash_attention_op, sfc_keys_op
+from repro.kernels.ops import (exclusive_scan_op, flash_attention_op,
+                               ksection_histogram_op, sfc_keys_op)
 
 RNG = np.random.default_rng(0)
 
@@ -57,6 +60,88 @@ def test_prefix_scan_op_padding():
     got = exclusive_scan_op(x, use_pallas=True, interpret=True)
     want = ref.exclusive_scan_ref(x)
     assert float(jnp.max(jnp.abs(got - want))) < 1e-2
+
+
+# --- ksection_hist ---------------------------------------------------------
+# Integer-valued weights make every partial sum exact, so kernel, fused-jnp
+# and searchsorted+segment_sum oracle must agree BIT-exactly, not allclose.
+
+def _hist_case(n, m, seed=0, zero_frac=0.25):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.random(n).astype(np.float32))
+    w = rng.integers(1, 10, n).astype(np.float32)
+    w[rng.random(n) < zero_frac] = 0.0          # zero-weight items
+    cuts = jnp.asarray(rng.random(m).astype(np.float32))  # UNSORTED
+    return keys, jnp.asarray(w), cuts
+
+
+@pytest.mark.parametrize("n,m", [(1024, 28), (1000, 56), (4096, 120),
+                                 (37, 5), (2048, 1), (3000, 129)])
+def test_ksection_hist_kernel(n, m):
+    """Fused kernel vs oracle, incl. non-multiple-of-tile n and m."""
+    keys, w, cuts = _hist_case(n, m)
+    got = ksection_histogram_pallas(keys, w, cuts, interpret=True)
+    want = ref.ksection_histogram_ref(keys, w, cuts)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("n,m", [(1024, 28), (513, 40)])
+def test_ksection_hist_jnp_matches_ref(n, m):
+    keys, w, cuts = _hist_case(n, m, seed=1)
+    got = ksection_histogram_jnp(keys, w, cuts)
+    want = ref.ksection_histogram_ref(keys, w, cuts)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_ksection_hist_duplicate_keys_and_cuts():
+    """Ties everywhere: repeated keys, repeated cuts, and cuts exactly
+    equal to keys (the strict `key < cut` boundary)."""
+    rng = np.random.default_rng(2)
+    vals = np.array([0.1, 0.2, 0.2, 0.3, 0.5], np.float32)
+    keys = jnp.asarray(vals[rng.integers(0, 5, 2000)])
+    w = jnp.asarray(rng.integers(1, 5, 2000).astype(np.float32))
+    cuts = jnp.asarray(np.array([0.2, 0.1, 0.2, 0.5, 0.05, 0.3, 0.3, 0.9],
+                                np.float32))
+    got = ksection_histogram_pallas(keys, w, cuts, interpret=True)
+    want = ref.ksection_histogram_ref(keys, w, cuts)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    # equal cuts get equal below-weight, whatever their positions
+    g = np.asarray(got)
+    assert g[0] == g[2] and g[5] == g[6]
+
+
+def test_ksection_hist_sentinel_padded_tail():
+    """The sharded pipeline pads shards by repeating the last item with
+    weight 0: the tail must be invisible to every cut."""
+    keys, w, cuts = _hist_case(900, 24, seed=3)
+    pad = 1024 - 900
+    keys_p = jnp.concatenate([keys, jnp.broadcast_to(keys[-1:], (pad,))])
+    w_p = jnp.concatenate([w, jnp.zeros(pad, w.dtype)])
+    got_p = ksection_histogram_pallas(keys_p, w_p, cuts, interpret=True)
+    want = ref.ksection_histogram_ref(keys, w, cuts)
+    assert (np.asarray(got_p) == np.asarray(want)).all()
+
+
+def test_ksection_hist_empty_edges():
+    """n=0 and m=0 return zeros like the oracle instead of crashing."""
+    keys, w, cuts = _hist_case(64, 8, seed=5)
+    empty_f = jnp.zeros((0,), jnp.float32)
+    got = ksection_histogram_pallas(empty_f, empty_f, cuts, interpret=True)
+    assert got.shape == (8,) and not np.asarray(got).any()
+    got = ksection_histogram_pallas(keys, w, empty_f, interpret=True)
+    assert got.shape == (0,)
+
+
+def test_ksection_hist_op_dispatch():
+    """Default on CPU runs the oracle exactly; use_pallas=True runs the
+    kernel (interpret mode off-TPU) and still matches bit-for-bit."""
+    keys, w, cuts = _hist_case(777, 21, seed=4)
+    want = ref.ksection_histogram_ref(keys, w, cuts)
+    assert (np.asarray(ksection_histogram_op(keys, w, cuts))
+            == np.asarray(want)).all()
+    got = ksection_histogram_op(keys, w, cuts, use_pallas=True,
+                                interpret=True)
+    assert (np.asarray(got) == np.asarray(want)).all()
 
 
 @pytest.mark.parametrize(
