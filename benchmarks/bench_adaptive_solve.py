@@ -12,6 +12,15 @@ on-device pipeline + element-payload migration.  Standalone:
 ``StepStats`` (sizes, error, eta, CG iterations, stage timings,
 imbalance, migration volume) per method, so the perf trajectory is
 comparable across PRs -- the same contract as ``bench_dlb --json``.
+
+``--vertex-layout owned`` runs the sharded session on owned vertices
+(halo-exchange matvec); the per-step record then carries the
+communication-volume columns -- replicated psum bytes vs halo bytes vs
+surface index (``comm_psum_bytes`` / ``comm_halo_bytes`` / ``cut``) --
+i.e. what one matvec would put on the wire under each layout.
+``--quick`` is the committed-baseline configuration
+(``benchmarks/baselines/BENCH_adaptive.json``): 3 steps, 3000 tets,
+hsfc, p=8 sharded owned.
 """
 import dataclasses
 import json
@@ -28,7 +37,8 @@ from repro.fem import AdaptSpec, AdaptiveSession, cylinder_mesh
 METHODS = ["rtk", "msfc", "hsfc", "hsfc_zoltan", "rcb"]
 
 
-def run(max_steps=4, max_tets=15000, p=16, backend="host", methods=None):
+def run(max_steps=4, max_tets=15000, p=16, backend="host", methods=None,
+        vertex_layout="replicated"):
     if backend == "sharded":
         import jax
         p = min(p, jax.device_count())
@@ -39,6 +49,7 @@ def run(max_steps=4, max_tets=15000, p=16, backend="host", methods=None):
         mesh = cylinder_mesh(6, 2, length=3.0, radius=0.5)
         spec = AdaptSpec(problem="helmholtz", max_steps=max_steps,
                          max_tets=max_tets, tol=1e-6, backend=backend,
+                         vertex_layout=vertex_layout,
                          balance=BalanceSpec(p=p, method=method))
         res = AdaptiveSession(spec).run(mesh)
         t_sol = sum(s.t_solve for s in res.stats)
@@ -53,32 +64,59 @@ def run(max_steps=4, max_tets=15000, p=16, backend="host", methods=None):
         rows.append((f"fig3.5/step_time/{method}",
                      t_step / len(res.stats) * 1e6,
                      res.stats[-1].n_tets))
+        if vertex_layout == "owned":
+            # per-matvec wire volume: what the halo exchange costs vs the
+            # global psum it replaced, next to the surface index driving it
+            last = res.stats[-1]
+            rows.append((f"comm/halo_bytes/{method}",
+                         float(last.comm_halo_bytes), last.cut))
+            rows.append((f"comm/psum_bytes/{method}",
+                         float(last.comm_psum_bytes), last.n_verts))
         records[method] = {
             "n_repartitions": res.n_repartitions,
             "steps": [dataclasses.asdict(s) for s in res.stats],
         }
     meta = {"bench": "adaptive_solve", "example": "3.1-helmholtz",
             "backend": backend, "p": p, "max_steps": max_steps,
-            "max_tets": max_tets, "methods": records}
+            "max_tets": max_tets, "vertex_layout": vertex_layout,
+            "methods": records}
     return rows, meta
 
 
 def main():
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--backend", default="host",
+    ap.add_argument("--backend", default=None,
                     choices=["host", "sharded"])
-    ap.add_argument("--max-steps", type=int, default=4)
-    ap.add_argument("--max-tets", type=int, default=15000)
-    ap.add_argument("--p", type=int, default=16)
+    ap.add_argument("--vertex-layout", default=None,
+                    choices=["replicated", "owned"],
+                    help="owned = halo-exchange vertex sharding "
+                         "(needs --backend sharded); records the "
+                         "communication-volume columns")
+    ap.add_argument("--max-steps", type=int, default=None)
+    ap.add_argument("--max-tets", type=int, default=None)
+    ap.add_argument("--p", type=int, default=None)
     ap.add_argument("--methods", default=None,
                     help="comma-separated subset of " + ",".join(METHODS))
+    ap.add_argument("--quick", action="store_true",
+                    help="committed-baseline config: 3 steps, 3000 tets, "
+                         "hsfc, p=8, sharded owned (explicit flags win)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a machine-readable per-step record to PATH")
     args = ap.parse_args()
+    # fill unset flags from the preset (quick) or the normal defaults, so
+    # an explicit flag always wins over --quick
+    preset = (dict(backend="sharded", vertex_layout="owned", max_steps=3,
+                   max_tets=3000, p=8, methods="hsfc") if args.quick else
+              dict(backend="host", vertex_layout="replicated", max_steps=4,
+                   max_tets=15000, p=16, methods=None))
+    for k, v in preset.items():
+        if getattr(args, k) is None:
+            setattr(args, k, v)
     methods = args.methods.split(",") if args.methods else None
     rows, meta = run(max_steps=args.max_steps, max_tets=args.max_tets,
-                     p=args.p, backend=args.backend, methods=methods)
+                     p=args.p, backend=args.backend, methods=methods,
+                     vertex_layout=args.vertex_layout)
     print("name,us_per_call,derived")
     for row in rows:
         print(f"{row[0]},{row[1]:.1f},{row[2]}")

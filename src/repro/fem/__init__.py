@@ -16,8 +16,9 @@ from .assemble import (P1Elements, build_elements, element_gradients,
                        load_vector, mass_matvec, operator_diagonal,
                        stiffness_matvec)
 from .estimate import doerfler_mark, threshold_coarsen_mark, zz_estimate
+from .halo import HaloPlan, build_halo_plan, halo_reduce
 from .mesh import Mesh, cylinder_mesh, kuhn_box_mesh, unit_cube_mesh
 from .problems import (HelmholtzProblem, ParabolicProblem, ProblemSetup,
                        get_problem, problem_names, register_problem)
 from .refine import coarsen, refine, uniform_refine
-from .solve import CGResult, pcg, solve_dirichlet
+from .solve import CGResult, owned_vdot, pcg, solve_dirichlet

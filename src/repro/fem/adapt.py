@@ -16,10 +16,12 @@ level up, to the loop that drives it:
   Hashable, leaf-free pytree, plain-dict round-trip (nested spec
   included).
 * stage registry      -- loop stages registered per ``(stage, variant)``:
-  ``solve`` ('stationary' | 'backward_euler'), ``estimate`` ('zz'),
-  ``mark`` ('doerfler'), ``adapt_mesh`` ('refine' | 'coarsen_refine'),
-  ``transfer`` ('p1'), ``balance`` ('host' | 'sharded').  New physics or
-  backends register variants instead of forking the driver.
+  ``solve`` ('stationary' | 'backward_euler', plus '_owned' twins that
+  run distributed PCG on owner-sharded vertices via the halo exchange),
+  ``estimate`` ('zz'), ``mark`` ('doerfler'), ``adapt_mesh`` ('refine' |
+  'coarsen_refine'), ``transfer`` ('p1'), ``balance`` ('host' |
+  'sharded').  New physics or backends register variants instead of
+  forking the driver.
 * ``AdaptiveSession`` -- resolves a spec into stage functions, runs the
   loop template for the problem kind, centralizes per-stage wall-clock
   timing and ``StepStats`` emission, and invokes user hooks
@@ -38,7 +40,13 @@ construction).
 on-device pipeline and adds the element-payload resharding
 (``fem.parallel.shard_elements_on_device``) to the balance stage, so the
 refined mesh's payloads migrate between devices with the executor's
-``all_to_all`` after every repartition.
+``all_to_all`` after every repartition.  ``vertex_layout='owned'``
+additionally rebuilds the owned-vertex ``fem.halo.HaloPlan`` from every
+new partition (the ghost sets change whenever the cut does) and swaps
+the solve stage for the halo-exchange distributed PCG, so the loop runs
+end-to-end without any vertex-sized global collective; the per-matvec
+wire-volume model (psum vs halo bytes vs surface index) lands in
+``StepStats``.
 
 ``solve_helmholtz_adaptive`` / ``solve_parabolic_adaptive`` remain as
 deprecated thin wrappers that build a spec and delegate to the session.
@@ -55,6 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import Balancer, BalanceSpec, imbalance
+from ..core.metrics import cut_links
 from ..core.spec import Spec, register_spec_pytree
 from .assemble import build_elements, load_vector, mass_matvec
 from .estimate import doerfler_mark, threshold_coarsen_mark, zz_estimate
@@ -62,6 +71,8 @@ from .mesh import Mesh
 from .problems import ParabolicProblem, ProblemSetup, get_problem
 from .refine import coarsen, refine
 from .solve import solve_dirichlet
+
+from .parallel import VERTEX_LAYOUTS
 
 ADAPT_STAGES = ("solve", "estimate", "mark", "adapt_mesh", "transfer",
                 "balance")
@@ -90,6 +101,11 @@ class StepStats:
     cut: Optional[int] = None
     migration_retained: float = 0.0
     t_transfer: float = 0.0
+    # communication-volume model per matvec (vertex_layout='owned' only):
+    # replicated-path psum bytes vs halo-exchange bytes; cut above is the
+    # surface index the halo bytes scale with
+    comm_psum_bytes: int = 0
+    comm_halo_bytes: int = 0
 
 
 @dataclass
@@ -101,6 +117,8 @@ class AdaptiveResult:
     # backend='sharded': the latest on-device (p, C, ...) element packing
     # produced by fem.parallel.shard_elements_on_device after balancing
     sharded: Optional[object] = None
+    # vertex_layout='owned': the HaloPlan matching ``sharded``
+    halo: Optional[object] = None
     spec: Optional["AdaptSpec"] = None
 
 
@@ -135,6 +153,12 @@ class AdaptSpec(Spec):
                        is overridden by this spec's ``backend``
     backend            'host' | 'sharded' (on-device balance pipeline +
                        element-payload resharding per step)
+    vertex_layout      'replicated' | 'owned' (sharded backend only):
+                       'owned' shards vertices by owner part -- the
+                       balance stage derives a ``fem.halo.HaloPlan`` from
+                       every new partition and the solve runs distributed
+                       PCG whose matvec communicates via the neighbor
+                       halo exchange instead of a global psum
     max_steps          stationary: adaptive iterations
     max_tets           stop refining beyond this many elements
     dt, n_steps        time stepping (backward Euler); ``dt == 0`` means
@@ -151,6 +175,7 @@ class AdaptSpec(Spec):
     imbalance_trigger: float = 1.05
     balance: BalanceSpec = BalanceSpec(p=16, method="hsfc")
     backend: str = "host"
+    vertex_layout: str = "replicated"
     max_steps: int = 10
     max_tets: int = 200_000
     dt: float = 0.0
@@ -170,6 +195,13 @@ class AdaptSpec(Spec):
         if self.backend not in ADAPT_BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"choose from {ADAPT_BACKENDS}")
+        if self.vertex_layout not in VERTEX_LAYOUTS:
+            raise ValueError(
+                f"unknown vertex_layout {self.vertex_layout!r}; "
+                f"choose from {VERTEX_LAYOUTS}")
+        if self.vertex_layout == "owned" and self.backend != "sharded":
+            raise ValueError("vertex_layout='owned' needs backend='sharded' "
+                             "(the halo exchange lives on the device mesh)")
         if not 0.0 < self.theta <= 1.0:
             raise ValueError(f"theta must be in (0, 1], got {self.theta}")
         if self.coarsen_frac < 0.0:
@@ -264,6 +296,8 @@ def resolve_adapt_variants(spec: AdaptSpec,
     if solve == "auto":
         solve = ("stationary" if setup.kind == "stationary"
                  else "backward_euler")
+        if spec.backend == "sharded" and spec.vertex_layout == "owned":
+            solve += "_owned"
     stationary = setup.kind == "stationary"
     return {
         "solve": solve,
@@ -299,6 +333,18 @@ class SessionState:
     migration_retained: float = 0.0
     balance_result: Any = None          # core.BalanceResult of last repart
     sharded: Any = None                 # latest ShardedElements (sharded)
+    halo: Any = None                    # HaloPlan matching `sharded` (owned)
+    # staleness tracking for the owned packing: the adapt_mesh stages bump
+    # mesh_version on every mutation (counts alone can't tell a
+    # coarsen+refine step that keeps n_tets/n_verts constant from a no-op)
+    mesh_version: int = 0
+    packed_version: int = -1            # mesh_version `sharded` was packed at
+    packed_ntets: int = -1              # n_tets `sharded` was packed for
+    balanced_step: int = -1             # step _balance_common last ran on
+    owned_ops: Dict[float, Any] = field(default_factory=dict)  # c -> (mv, diag)
+    cut: Optional[int] = None           # surface index of current partition
+    comm_psum_bytes: int = 0            # per-matvec comm model (owned)
+    comm_halo_bytes: int = 0
     timings: Dict[str, float] = field(default_factory=dict)
 
     @property
@@ -365,6 +411,108 @@ def _solve_backward_euler(session: "AdaptiveSession", state: SessionState):
     state.cg_iters = int(sol.iters)
 
 
+def _pack_owned(session: "AdaptiveSession", state: SessionState):
+    """Owned-layout packing from the current mesh + partition: build the
+    ``HaloPlan``, migrate/renumber element payloads on device, record the
+    per-matvec communication model, and invalidate the cached operators.
+    The single packing recipe -- both the balance stage and the solve-path
+    staleness repack go through here."""
+    from .halo import build_halo_plan
+    from .parallel import shard_elements_on_device
+    el = _ensure_elements(state)
+    mesh = state.mesh
+    parts = mesh.leaf_payload["parts"]
+    p = session.balance_spec.p
+    plan = build_halo_plan(mesh.tets, parts, mesh.n_verts, p)
+    state.halo = plan
+    state.sharded = shard_elements_on_device(
+        el, jnp.asarray(parts), p, session.device_mesh, halo=plan)
+    state.packed_ntets = mesh.n_tets
+    state.packed_version = state.mesh_version
+    state.owned_ops = {}
+    state.cut = int(cut_links(jnp.asarray(parts),
+                              jnp.asarray(mesh.face_adjacency())))
+    state.comm_psum_bytes = plan.psum_bytes()
+    state.comm_halo_bytes = plan.halo_bytes()
+
+
+def _ensure_owned_packing(session: "AdaptiveSession", state: SessionState):
+    """(Re)build the owned-layout packing + halo plan iff stale.
+
+    Fresh after the previous step's sharded balance stage on the
+    stationary loop; the time-dependent loop adapts the mesh *before*
+    solving (``mesh_version`` moved on), so the inherited
+    (propagated-through-coarsen/refine) partition re-packs here.  The
+    first step, with no partition at all, runs the balance policy once --
+    the end-of-step balance stage then sees it as inherited."""
+    el = _ensure_elements(state)
+    mesh = state.mesh
+    if (state.halo is not None and state.sharded is not None
+            and state.sharded.layout == "owned"
+            and state.packed_version == state.mesh_version
+            and state.halo.n_verts == el.n_verts
+            and state.packed_ntets == mesh.n_tets):
+        return
+    parts = state.parts
+    if parts is None or len(parts) != mesh.n_tets:
+        _balance_common(session, state)
+    _pack_owned(session, state)
+
+
+def _owned_operators(session: "AdaptiveSession", state: SessionState,
+                     c: float):
+    """Cached (matvec, diagonal) pair for the current packing -- rebuilt
+    only when the packing itself is (``_pack_owned`` clears the cache)."""
+    from .parallel import make_owned_operators
+    ops = state.owned_ops.get(c)
+    if ops is None:
+        ops = make_owned_operators(state.sharded, session.device_mesh, c)
+        state.owned_ops[c] = ops
+    return ops
+
+
+@register_adapt_stage("solve", "stationary_owned")
+def _solve_stationary_owned(session: "AdaptiveSession", state: SessionState):
+    """Stationary solve on owned vertices: distributed PCG whose matvec
+    communicates via the halo exchange (no vertex-sized psum)."""
+    from .parallel import sharded_solve_dirichlet
+    prob = session.problem
+    el = _ensure_elements(state)
+    _ensure_owned_packing(session, state)
+    verts = jnp.asarray(state.mesh.verts)
+    rhs = load_vector(el, verts, prob.f)
+    sol = sharded_solve_dirichlet(
+        state.sharded, session.device_mesh, rhs, prob.exact(verts),
+        _free_mask(state.mesh), prob.c, tol=session.spec.tol,
+        maxiter=session.spec.maxiter,
+        operators=_owned_operators(session, state, prob.c))
+    state.u = jax.block_until_ready(sol.x)
+    state.cg_iters = int(sol.iters)
+
+
+@register_adapt_stage("solve", "backward_euler_owned")
+def _solve_backward_euler_owned(session: "AdaptiveSession",
+                                state: SessionState):
+    """Backward-Euler step on owned vertices (same system as the
+    replicated variant, halo-exchange matvec)."""
+    from .parallel import sharded_solve_dirichlet
+    prob = session.problem
+    spec = session.spec
+    t_next = state.t + spec.dt
+    el = _ensure_elements(state)
+    _ensure_owned_packing(session, state)
+    verts = jnp.asarray(state.mesh.verts)
+    fv = load_vector(el, verts, lambda x: prob.f(x, t_next))
+    rhs = mass_matvec(el, jnp.asarray(state.u)) / spec.dt + fv
+    c = 1.0 / spec.dt
+    sol = sharded_solve_dirichlet(
+        state.sharded, session.device_mesh, rhs, prob.exact(verts, t_next),
+        _free_mask(state.mesh), c, tol=spec.tol, maxiter=spec.maxiter,
+        operators=_owned_operators(session, state, c))
+    state.u = jax.block_until_ready(sol.x)
+    state.cg_iters = int(sol.iters)
+
+
 @register_adapt_stage("estimate", "zz")
 def _estimate_zz(session: "AdaptiveSession", state: SessionState):
     """Zienkiewicz--Zhu gradient-recovery indicators for the current u."""
@@ -390,6 +538,7 @@ def _adapt_refine(session: "AdaptiveSession", state: SessionState):
     if state.mesh.n_tets < spec.max_tets and not last:
         refine(state.mesh, state.marked)
         state.grew = True
+        state.mesh_version += 1
 
 
 @register_adapt_stage("adapt_mesh", "coarsen_refine")
@@ -404,7 +553,8 @@ def _adapt_coarsen_refine(session: "AdaptiveSession", state: SessionState):
     state.el = None
     estimate(session, state)
     coarsen(mesh, threshold_coarsen_mark(state.eta, spec.coarsen_frac))
-    state.el = None
+    state.mesh_version += 1     # coarsen+refine can keep n_tets/n_verts
+    state.el = None             # constant; the version must still move
     estimate(session, state)
     session.stage_fn("mark")(session, state)
     state.active_before = np.zeros(mesh.n_verts, bool)
@@ -413,6 +563,7 @@ def _adapt_coarsen_refine(session: "AdaptiveSession", state: SessionState):
     if mesh.n_tets < spec.max_tets:
         refine(mesh, state.marked)
         state.grew = True
+        state.mesh_version += 1
 
 
 @register_adapt_stage("transfer", "p1")
@@ -444,6 +595,11 @@ def _balance_common(session: "AdaptiveSession", state: SessionState):
         repart = inherited is None       # must partition at least once
     else:                                # 'imbalance' (the paper's)
         repart = inherited is None or cur > spec.imbalance_trigger
+    # the owned-layout solve stage may have run this already (step 0 has
+    # no partition to pack) -- a later no-repartition decision must not
+    # erase that repartition's stats for the step
+    first_this_step = state.balanced_step != state.step
+    state.balanced_step = state.step
     if repart:
         old = None if inherited is None else jnp.asarray(inherited)
         br = session.balancer.balance(
@@ -453,13 +609,15 @@ def _balance_common(session: "AdaptiveSession", state: SessionState):
         state.step_imbalance = float(br.imbalance)
         state.migration_totalv = float(br.total_v)
         state.migration_retained = float(br.retained)
+        state.repartitioned = True
     else:
         parts = jnp.asarray(inherited)
-        state.balance_result = None
         state.step_imbalance = cur
-        state.migration_totalv = 0.0
-        state.migration_retained = 0.0
-    state.repartitioned = repart
+        if first_this_step:
+            state.balance_result = None
+            state.migration_totalv = 0.0
+            state.migration_retained = 0.0
+            state.repartitioned = False
     mesh.leaf_payload["parts"] = np.asarray(parts)
 
 
@@ -473,13 +631,31 @@ def _balance_sharded(session: "AdaptiveSession", state: SessionState):
     """Sharded balance: the DLB pipeline runs in one jitted shard_map
     region (via the sharded ``Balancer``), then the mesh's element
     payloads are re-packed across devices with the migration executor's
-    ``all_to_all`` -- the paper's per-step data migration, for real."""
+    ``all_to_all`` -- the paper's per-step data migration, for real.
+
+    With ``vertex_layout='owned'`` the ``HaloPlan`` is rebuilt from the
+    fresh partition + connectivity after every repartition (the ghost
+    sets change whenever the cut does), connectivity is renumbered to
+    part-local slots during the same migration, and the per-matvec
+    communication model (replicated psum bytes vs halo bytes vs surface
+    index) is recorded for the step's stats."""
     from .parallel import shard_elements_on_device
     _balance_common(session, state)
+    if session.spec.vertex_layout == "owned":
+        # the solve stage may have packed this very (mesh, partition)
+        # already; only a new partition or a mesh mutation needs a repack
+        if (state.repartitioned or state.packed_version != state.mesh_version
+                or state.sharded is None or state.sharded.layout != "owned"):
+            _pack_owned(session, state)
+        return
     el = _ensure_elements(state)
+    mesh = state.mesh
+    state.halo = None
     state.sharded = shard_elements_on_device(
-        el, jnp.asarray(state.mesh.leaf_payload["parts"]),
+        el, jnp.asarray(mesh.leaf_payload["parts"]),
         session.balance_spec.p, session.device_mesh)
+    state.packed_ntets = mesh.n_tets
+    state.packed_version = state.mesh_version
 
 
 # ---------------------------------------------------------------------------
@@ -616,6 +792,7 @@ class AdaptiveSession:
             result.u = jnp.asarray(state.u)
         result.mesh = state.mesh
         result.sharded = state.sharded
+        result.halo = state.halo
         return result
 
     def _emit_stats(self, state: SessionState) -> StepStats:
@@ -632,8 +809,11 @@ class AdaptiveSession:
             imbalance=state.step_imbalance,
             repartitioned=state.repartitioned,
             migration_totalv=state.migration_totalv,
+            cut=state.cut,
             migration_retained=state.migration_retained,
-            t_transfer=tm.get("transfer", 0.0))
+            t_transfer=tm.get("transfer", 0.0),
+            comm_psum_bytes=state.comm_psum_bytes,
+            comm_halo_bytes=state.comm_halo_bytes)
 
 
 # ---------------------------------------------------------------------------

@@ -20,14 +20,27 @@ Two element-distribution paths:
 JAX mapping: element arrays are laid out as (p, C, ...) -- one row per
 part, padded to the capacity C = max part size (capacity comes from the
 same prefix-sum machinery as the partition itself).  The matvec inside
-``shard_map`` does the local gather->apply->scatter and one ``psum`` over
-the mesh axis for the shared-vertex reduction.  The partition quality
-(surface index) controls exactly how much of that psum is redundant --
-the quantity the paper's geometric methods trade against partition speed.
+``shard_map`` does the local gather->apply->scatter and the shared-vertex
+reduction.  The partition quality (surface index) controls exactly how
+much of that reduction is inter-process -- the quantity the paper's
+geometric methods trade against partition speed.
 
-The vertex vector is replicated (laptop-scale meshes; a production run
-would shard vertices too and turn the psum into a halo exchange -- noted
-in DESIGN.md).
+Two vertex layouts (``vertex_layout`` on the operators):
+
+* ``"replicated"``  the vertex vector is (n_verts,) on every device and
+                    the reduction is one global ``psum`` -- O(n_verts)
+                    wire traffic per matvec regardless of partition
+                    quality.  Kept as the parity oracle.
+* ``"owned"``       vertices are sharded by owner part (``fem.halo``):
+                    vectors are (p, V) with locally renumbered
+                    connectivity, and the reduction is
+                    ``halo.halo_reduce`` -- two neighbor ``all_to_all``
+                    legs whose wire volume is proportional to the
+                    partition's cut (the surface index), not the mesh
+                    size.  This is the production path (see ROADMAP's
+                    "Owned-vertex FEM layer" migration guide; the
+                    replicated psum used to be called out here as the
+                    known production gap).
 """
 from __future__ import annotations
 
@@ -41,9 +54,13 @@ from jax.sharding import Mesh as JMesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..distributed.sharding import shard_map
-from .assemble import P1Elements
+from .assemble import _MASS, P1Elements
+from .halo import HaloPlan, build_halo_plan, halo_reduce
+from .solve import CGResult, owned_vdot, pcg
 
 AXIS = "fem"
+
+VERTEX_LAYOUTS = ("replicated", "owned")
 
 
 def device_mesh(p: int, *, devices=None) -> JMesh:
@@ -61,35 +78,68 @@ def device_mesh(p: int, *, devices=None) -> JMesh:
 
 
 class ShardedElements(NamedTuple):
-    tets: jax.Array    # (p, C, 4) int32, padded with 0
+    """(p, C, ...) per-part element packing.
+
+    ``layout="replicated"``: ``tets`` holds global vertex ids (padding 0,
+    vol 0 makes padded elements no-ops).  ``layout="owned"``: ``tets``
+    holds part-local slot ids into the ``halo`` plan's (p, V) vertex
+    layout (padding ``halo.V``, dropped by the local scatter)."""
+    tets: jax.Array    # (p, C, 4) int32
     grads: jax.Array   # (p, C, 4, 3)
     vol: jax.Array     # (p, C)  (0 on padding -> padded elements are no-ops)
     n_verts: int
     p: int
+    halo: Optional[HaloPlan] = None
+    layout: str = "replicated"
 
 
-def shard_elements(el: P1Elements, parts: np.ndarray, p: int) -> ShardedElements:
-    """Pack per-part element lists padded to max part size."""
+def _resolve_layout(sel: ShardedElements, vertex_layout: Optional[str]) -> str:
+    layout = sel.layout if vertex_layout is None else vertex_layout
+    if layout not in VERTEX_LAYOUTS:
+        raise ValueError(f"unknown vertex_layout {layout!r}; "
+                         f"choose from {VERTEX_LAYOUTS}")
+    if layout != sel.layout:
+        raise ValueError(
+            f"vertex_layout={layout!r} needs elements packed with that "
+            f"layout (got layout={sel.layout!r}; pass halo= to the packer)")
+    if layout == "owned" and sel.halo is None:
+        raise ValueError("owned layout needs a HaloPlan on the packing")
+    return layout
+
+
+def shard_elements(el: P1Elements, parts: np.ndarray, p: int,
+                   halo: Optional[HaloPlan] = None) -> ShardedElements:
+    """Pack per-part element lists padded to max part size.
+
+    With ``halo`` given, connectivity is renumbered to part-local slots
+    (owned layout); padding rows point at slot ``halo.V`` so the local
+    scatter drops them."""
     parts = np.asarray(parts)
     tets = np.asarray(el.tets)
     grads = np.asarray(el.grads)
     vol = np.asarray(el.vol)
     counts = np.bincount(parts, minlength=p)
     C = int(counts.max())
-    st = np.zeros((p, C, 4), np.int32)
+    pad_vert = 0 if halo is None else halo.V
+    st = np.full((p, C, 4), pad_vert, np.int32)
     sg = np.zeros((p, C, 4, 3), grads.dtype)
     sv = np.zeros((p, C), vol.dtype)
+    g2l = None if halo is None else np.asarray(halo.global_to_local)
     for i in range(p):
         idx = np.flatnonzero(parts == i)
-        st[i, :idx.size] = tets[idx]
+        t = tets[idx]
+        st[i, :idx.size] = t if halo is None else g2l[i, t]
         sg[i, :idx.size] = grads[idx]
         sv[i, :idx.size] = vol[idx]
     return ShardedElements(jnp.asarray(st), jnp.asarray(sg), jnp.asarray(sv),
-                           el.n_verts, p)
+                           el.n_verts, p, halo=halo,
+                           layout="replicated" if halo is None else "owned")
 
 
 def shard_elements_on_device(el: P1Elements, parts: jax.Array, p: int,
-                             mesh: JMesh) -> ShardedElements:
+                             mesh: JMesh,
+                             halo: Optional[HaloPlan] = None
+                             ) -> ShardedElements:
     """Pack per-part element lists with the migration executor.
 
     Elements start index-sharded (shard r owns global rows [rC, (r+1)C));
@@ -98,6 +148,12 @@ def shard_elements_on_device(el: P1Elements, parts: jax.Array, p: int,
     it.  The only host work is sizing the receive capacity from the part
     counts (the same quantity the host packer needs for its array shapes).
     Padding rows keep vol = 0 so they are no-ops in the sharded matvec.
+
+    With ``halo`` given, the halo plan's payload migrates alongside: each
+    shard's ``global_to_local`` row rides on the same device mesh and
+    renumbers the received connectivity to part-local slots inside the
+    same shard_map region (owned layout; padding/invalid rows point at
+    slot ``halo.V``).
     """
     from ..distributed.migrate import migrate_items
     parts_h = np.asarray(parts)
@@ -118,33 +174,50 @@ def shard_elements_on_device(el: P1Elements, parts: jax.Array, p: int,
     vol = pad(el.vol)
     dest = pad(parts, jnp.int32)
 
-    def local(tets_l, grads_l, vol_l, dest_l):
+    def local(tets_l, grads_l, vol_l, dest_l, *g2l_l):
         rank = jax.lax.axis_index(AXIS)
         valid = rank * C_in + jnp.arange(C_in) < n
         mig = migrate_items(
             {"tets": tets_l, "grads": grads_l, "vol": vol_l},
             dest_l, vol_l, AXIS, p, valid=valid, capacity=cap)
-        t = jnp.where(mig.valid[:, None], mig.payload["tets"], 0)
+        t = mig.payload["tets"]
+        if halo is None:
+            t = jnp.where(mig.valid[:, None], t, 0)
+        else:
+            # renumber to part-local slots; invalid/padding -> slot V
+            t = g2l_l[0][0][jnp.minimum(t, halo.n_verts - 1)]
+            t = jnp.where(mig.valid[:, None], t, halo.V)
         g = jnp.where(mig.valid[:, None, None], mig.payload["grads"], 0.0)
         v = jnp.where(mig.valid, mig.payload["vol"], 0.0)
         return t, g, v
 
-    fn = jax.jit(shard_map(local, mesh=mesh, in_specs=(P(AXIS),) * 4,
+    n_in = 4 if halo is None else 5
+    fn = jax.jit(shard_map(local, mesh=mesh, in_specs=(P(AXIS),) * n_in,
                            out_specs=(P(AXIS),) * 3))
-    st, sg, sv = fn(tets, grads, vol, dest)
+    args = (tets, grads, vol, dest)
+    if halo is not None:
+        args = args + (halo.global_to_local,)
+    st, sg, sv = fn(*args)
     return ShardedElements(st.reshape(p, cap, 4),
                            sg.reshape(p, cap, 4, 3),
-                           sv.reshape(p, cap), el.n_verts, p)
+                           sv.reshape(p, cap), el.n_verts, p, halo=halo,
+                           layout="replicated" if halo is None else "owned")
 
 
 def reshard_elements(el: P1Elements, coords: jax.Array, p: int, *,
                      mesh: Optional[JMesh] = None,
                      old_parts: Optional[jax.Array] = None,
-                     balancer=None, spec=None):
+                     balancer=None, spec=None,
+                     vertex_layout: str = "replicated"):
     """One full on-device DLB step for the FEM layer: partition + remap
     inside one jitted shard_map region (``Balancer`` with
     ``backend='sharded'``), then element payload migration via
     ``all_to_all``.  Returns (ShardedElements, result).
+
+    ``vertex_layout="owned"`` additionally derives the halo plan from the
+    fresh partition (``fem.halo.build_halo_plan``) and packs locally
+    renumbered connectivity, so the returned elements drive the
+    halo-exchange operators directly.
 
     Convenience one-call entry for examples/library users.  In a loop,
     pass a persistent ``balancer`` (a ``repro.core.Balancer`` or the
@@ -154,6 +227,9 @@ def reshard_elements(el: P1Elements, coords: jax.Array, p: int, *,
     points of its step, composes the stages itself instead.
     """
     from ..core.spec import Balancer, BalanceSpec
+    if vertex_layout not in VERTEX_LAYOUTS:
+        raise ValueError(f"unknown vertex_layout {vertex_layout!r}; "
+                         f"choose from {VERTEX_LAYOUTS}")
     if balancer is None:
         if spec is None:
             spec = BalanceSpec(p=p, method="hsfc", backend="sharded")
@@ -162,68 +238,189 @@ def reshard_elements(el: P1Elements, coords: jax.Array, p: int, *,
         mesh = device_mesh(p)
     w = jnp.ones(el.tets.shape[0], jnp.float32)
     res = balancer.balance(w, coords=coords, old_parts=old_parts)
-    sel = shard_elements_on_device(el, res.parts, p, mesh)
+    halo = None
+    if vertex_layout == "owned":
+        halo = build_halo_plan(np.asarray(el.tets), np.asarray(res.parts),
+                               el.n_verts, p)
+    sel = shard_elements_on_device(el, res.parts, p, mesh, halo=halo)
     return sel, res
 
 
-def make_sharded_matvec(sel: ShardedElements, mesh: JMesh, c: float = 0.0
-                        ) -> Tuple[Callable, jax.Array]:
+def make_sharded_matvec(sel: ShardedElements, mesh: JMesh, c: float = 0.0,
+                        vertex_layout: Optional[str] = None
+                        ) -> Tuple[Callable, tuple]:
     """Returns (matvec, element arrays placed on the mesh).
 
-    matvec: (nv,) replicated -> (nv,) replicated, one psum over AXIS.
+    ``vertex_layout`` (default: the packing's own layout):
+
+    * ``"replicated"``: matvec maps (nv,) replicated -> (nv,) replicated,
+      one global ``psum`` over AXIS.
+    * ``"owned"``: matvec maps (p, V) -> (p, V), both sharded ``P(AXIS)``
+      in the packing's halo-plan layout; the reduction is
+      ``halo_reduce`` (two neighbor ``all_to_all`` legs, no psum).  The
+      input must be ghost-consistent (every copy of a shared vertex
+      equal -- what ``HaloPlan.to_local`` and the matvec itself
+      produce), and the output is ghost-consistent again.
     """
+    layout = _resolve_layout(sel, vertex_layout)
     spec_el = NamedSharding(mesh, P(AXIS))
     tets = jax.device_put(sel.tets, spec_el)
     grads = jax.device_put(sel.grads, spec_el)
     vol = jax.device_put(sel.vol, spec_el)
-    nv = sel.n_verts
 
-    mass = (jnp.full((4, 4), 1.0 / 20.0) + jnp.eye(4) * (1.0 / 20.0))
-
-    def local_apply(tets_l, grads_l, vol_l, u):
-        # tets_l: (1, C, 4) block -> squeeze the part dim
-        t = tets_l[0]
-        g = grads_l[0]
-        v = vol_l[0]
-        ue = u[t]                                     # (C, 4)
+    def element_apply(t, g, v, u, nv):
+        ue = u[jnp.minimum(t, nv - 1)]                # (C, 4); pad -> x0
         flux = jnp.einsum("cid,ci->cd", g, ue)
         au = jnp.einsum("cjd,cd->cj", g, flux) * v[:, None]
         if c != 0.0:
-            au = au + c * jnp.einsum("ij,cj->ci", mass, ue) * v[:, None]
-        y = jax.ops.segment_sum(au.reshape(-1), t.reshape(-1),
-                                num_segments=nv)
-        return jax.lax.psum(y, AXIS)
+            au = au + c * jnp.einsum("ij,cj->ci", _MASS, ue) * v[:, None]
+        # padded elements have g = 0, v = 0 -> au = 0 there, so clamped
+        # gathers and dropped/clipped scatter ids never contribute
+        return jax.ops.segment_sum(au.reshape(-1), t.reshape(-1),
+                                   num_segments=nv)
+
+    if layout == "replicated":
+        nv = sel.n_verts
+
+        def local_apply(tets_l, grads_l, vol_l, u):
+            # (1, C, ...) block -> squeeze the part dim
+            y = element_apply(tets_l[0], grads_l[0], vol_l[0], u, nv)
+            return jax.lax.psum(y, AXIS)
+
+        shmap = shard_map(
+            local_apply, mesh=mesh,
+            in_specs=(P(AXIS), P(AXIS), P(AXIS), P()),
+            out_specs=P())
+
+        def matvec(u):
+            return shmap(tets, grads, vol, u)
+
+        return matvec, (tets, grads, vol)
+
+    plan = sel.halo
+    send_idx = jax.device_put(plan.send_idx, spec_el)
+    recv_idx = jax.device_put(plan.recv_idx, spec_el)
+
+    def local_apply_owned(tets_l, grads_l, vol_l, send_l, recv_l, u_l):
+        y = element_apply(tets_l[0], grads_l[0], vol_l[0], u_l[0], plan.V)
+        return halo_reduce(y, send_l[0], recv_l[0], AXIS)[None]
 
     shmap = shard_map(
-        local_apply, mesh=mesh,
-        in_specs=(P(AXIS), P(AXIS), P(AXIS), P()),
-        out_specs=P())
+        local_apply_owned, mesh=mesh,
+        in_specs=(P(AXIS),) * 6, out_specs=P(AXIS))
 
-    def matvec(u):
-        return shmap(tets, grads, vol, u)
+    def matvec_owned(u):
+        return shmap(tets, grads, vol, send_idx, recv_idx, u)
 
-    return matvec, (tets, grads, vol)
+    return matvec_owned, (tets, grads, vol, send_idx, recv_idx)
 
 
-def sharded_diagonal(sel: ShardedElements, mesh: JMesh, c: float = 0.0
-                     ) -> jax.Array:
-    """diag(A + cM) computed with the same sharded reduction."""
-    matvec, _ = make_sharded_matvec(sel, mesh, c)
-    # cheap exact diagonal via local computation:
+def sharded_diagonal(sel: ShardedElements, mesh: JMesh, c: float = 0.0,
+                     vertex_layout: Optional[str] = None) -> jax.Array:
+    """diag(A + cM) computed with the same sharded reduction.
+
+    Layouts as in ``make_sharded_matvec``: replicated returns (nv,), owned
+    returns (p, V) sharded in the halo-plan layout."""
+    layout = _resolve_layout(sel, vertex_layout)
     spec_el = NamedSharding(mesh, P(AXIS))
     tets = jax.device_put(sel.tets, spec_el)
     grads = jax.device_put(sel.grads, spec_el)
     vol = jax.device_put(sel.vol, spec_el)
-    nv = sel.n_verts
 
-    def local_diag(tets_l, grads_l, vol_l):
-        t, g, v = tets_l[0], grads_l[0], vol_l[0]
+    def local_diag(t, g, v, nv):
         d = jnp.einsum("cid,cid->ci", g, g) * v[:, None]
         if c != 0.0:
             d = d + c * 0.1 * v[:, None]
-        y = jax.ops.segment_sum(d.reshape(-1), t.reshape(-1), num_segments=nv)
-        return jax.lax.psum(y, AXIS)
+        return jax.ops.segment_sum(d.reshape(-1), t.reshape(-1),
+                                   num_segments=nv)
 
-    return shard_map(local_diag, mesh=mesh,
-                     in_specs=(P(AXIS),) * 3, out_specs=P())(
-        tets, grads, vol)
+    if layout == "replicated":
+        nv = sel.n_verts
+
+        def local(tets_l, grads_l, vol_l):
+            y = local_diag(tets_l[0], grads_l[0], vol_l[0], nv)
+            return jax.lax.psum(y, AXIS)
+
+        return shard_map(local, mesh=mesh,
+                         in_specs=(P(AXIS),) * 3, out_specs=P())(
+            tets, grads, vol)
+
+    plan = sel.halo
+    send_idx = jax.device_put(plan.send_idx, spec_el)
+    recv_idx = jax.device_put(plan.recv_idx, spec_el)
+
+    def local_owned(tets_l, grads_l, vol_l, send_l, recv_l):
+        y = local_diag(tets_l[0], grads_l[0], vol_l[0], plan.V)
+        return halo_reduce(y, send_l[0], recv_l[0], AXIS)[None]
+
+    return shard_map(local_owned, mesh=mesh,
+                     in_specs=(P(AXIS),) * 5, out_specs=P(AXIS))(
+        tets, grads, vol, send_idx, recv_idx)
+
+
+def make_owned_operators(sel: ShardedElements, mesh: JMesh, c: float = 0.0
+                         ) -> Tuple[Callable, jax.Array]:
+    """(matvec, diagonal) pair for an owned-layout packing.
+
+    Build once per packing and reuse across solves (e.g. every time step
+    between repartitions) -- the closures carry the device-placed element
+    and plan arrays, so rebuilding them per call re-places and re-traces
+    for nothing."""
+    matvec, _ = make_sharded_matvec(sel, mesh, c, vertex_layout="owned")
+    diag = sharded_diagonal(sel, mesh, c, vertex_layout="owned")
+    return matvec, diag
+
+
+def sharded_solve_dirichlet(sel: ShardedElements, mesh: JMesh,
+                            rhs: jax.Array, g: jax.Array, free: jax.Array,
+                            c: float, *, tol: float = 1e-8,
+                            maxiter: int = 2000,
+                            operators: Optional[Tuple[Callable, jax.Array]]
+                            = None) -> CGResult:
+    """Owned-layout distributed PCG solve of (A + cM) u = rhs, u = g on
+    pinned dofs.
+
+    The replicated-layout twin of ``fem.solve.solve_dirichlet``: takes
+    the usual (n_verts,) ``rhs`` / boundary values ``g`` / ``free`` mask,
+    converts them into the packing's (p, V) halo layout, runs PCG where
+    every matvec communicates via ``halo_reduce`` (neighbor
+    ``all_to_all``) and every inner product is a masked-by-ownership
+    local reduction + one scalar psum, then assembles the solution back
+    to (n_verts,).  No vertex-sized global collective anywhere in the
+    iteration.
+
+    ``operators``: a prebuilt ``make_owned_operators(sel, mesh, c)``
+    pair; callers solving repeatedly on the same packing should build it
+    once and pass it in.
+    """
+    if sel.layout != "owned" or sel.halo is None:
+        raise ValueError("sharded_solve_dirichlet needs an owned-layout "
+                         "packing (pass halo= to the packer)")
+    plan = sel.halo
+    sharding = NamedSharding(mesh, P(AXIS))
+    place = functools.partial(jax.device_put, device=sharding)
+    rhs_l = place(plan.to_local(jnp.asarray(rhs)))
+    g_l = place(plan.to_local(jnp.asarray(g)))
+    free_l = place(plan.to_local(jnp.asarray(free)))
+    owned = place(plan.owned_mask)
+
+    if operators is None:
+        operators = make_owned_operators(sel, mesh, c)
+    matvec, diag_l = operators
+
+    g_ext = jnp.where(free_l > 0, 0.0, g_l)
+    lift = matvec(g_ext)
+    b = jnp.where(free_l > 0, rhs_l - lift, 0.0)
+    diag = jnp.where(free_l > 0, diag_l, 1.0)
+
+    def op(u):
+        au = matvec(u * free_l)
+        return jnp.where(free_l > 0, au, u)
+
+    res = pcg(op, b, diag, jnp.zeros_like(b), tol=tol, maxiter=maxiter,
+              vdot=owned_vdot(owned))
+    x = plan.from_local(res.x + g_ext)
+    # pinned dofs globally: vertices no leaf element references are in no
+    # part's local list, but the replicated path still reports g there
+    x = jnp.where(jnp.asarray(free) > 0, x, jnp.asarray(g))
+    return CGResult(x, res.iters, res.residual)

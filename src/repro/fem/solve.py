@@ -7,7 +7,7 @@ the right-hand side by the caller (see ``dirichlet_rhs``).
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,9 +23,27 @@ class CGResult(NamedTuple):
 
 def pcg(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,
         diag: jax.Array, x0: jax.Array, *, tol: float = 1e-8,
-        maxiter: int = 2000) -> CGResult:
-    """Standard PCG with Jacobi preconditioner M = diag."""
+        maxiter: int = 2000,
+        vdot: Optional[Callable[[jax.Array, jax.Array], jax.Array]] = None
+        ) -> CGResult:
+    """Standard PCG with Jacobi preconditioner M = diag.
+
+    ``vdot`` generalizes the inner product so the same loop runs on
+    sharded vertex vectors: with the owned layout, vectors are ``(p, V)``
+    with shared vertices present on every toucher, and ``vdot`` must be
+    the masked-by-ownership local reduction (each shared dof counted on
+    its owner only) -- one scalar psum under XLA, never a vertex-sized
+    collective.  Norms are derived from the same ``vdot`` so every
+    reduction in the loop goes through it.  Default: plain ``jnp.vdot``
+    (replicated layout), in which case the residual norms use
+    ``jnp.linalg.norm`` exactly as before.
+    """
     inv_d = jnp.where(diag > 0, 1.0 / diag, 0.0)
+    if vdot is None:
+        dot, norm = jnp.vdot, jnp.linalg.norm
+    else:
+        dot = vdot
+        norm = lambda v: jnp.sqrt(jnp.maximum(dot(v, v), 0.0))
 
     def prec(r):
         return r * inv_d
@@ -33,28 +51,40 @@ def pcg(matvec: Callable[[jax.Array], jax.Array], b: jax.Array,
     r0 = b - matvec(x0)
     z0 = prec(r0)
     p0 = z0
-    rz0 = jnp.vdot(r0, z0)
-    bnorm = jnp.maximum(jnp.linalg.norm(b), 1e-30)
+    rz0 = dot(r0, z0)
+    bnorm = jnp.maximum(norm(b), 1e-30)
 
     def cond(state):
         x, r, p, rz, it = state
-        return (jnp.linalg.norm(r) > tol * bnorm) & (it < maxiter)
+        return (norm(r) > tol * bnorm) & (it < maxiter)
 
     def body(state):
         x, r, p, rz, it = state
         ap = matvec(p)
-        alpha = rz / jnp.maximum(jnp.vdot(p, ap), 1e-30)
+        alpha = rz / jnp.maximum(dot(p, ap), 1e-30)
         x = x + alpha * p
         r = r - alpha * ap
         z = prec(r)
-        rz_new = jnp.vdot(r, z)
+        rz_new = dot(r, z)
         beta = rz_new / jnp.maximum(rz, 1e-30)
         p = z + beta * p
         return x, r, p, rz_new, it + 1
 
     x, r, p, rz, it = jax.lax.while_loop(
         cond, body, (x0, r0, p0, rz0, jnp.zeros((), jnp.int32)))
-    return CGResult(x, it, jnp.linalg.norm(r) / bnorm)
+    return CGResult(x, it, norm(r) / bnorm)
+
+
+def owned_vdot(owned_mask: jax.Array) -> Callable:
+    """Inner product for owned-layout ``(p, V)`` vertex vectors.
+
+    Shared vertices live on every toucher; masking by ownership counts
+    each dof exactly once, so the result equals the replicated
+    ``jnp.vdot`` up to summation order.  On sharded operands XLA lowers
+    the sum to a local reduction + one scalar psum."""
+    def dot(a, b):
+        return jnp.sum(jnp.where(owned_mask, a * b, 0.0))
+    return dot
 
 
 def masked_operator(el: P1Elements, free: jax.Array, c: float

@@ -59,6 +59,9 @@ def test_adapt_spec_rejects_unknown_fields():
     dict(trigger="sometimes"), dict(backend="tpu_pod"), dict(theta=0.0),
     dict(theta=1.5), dict(dt=-1.0), dict(dt=0.1), dict(n_steps=3),
     dict(coarsen_frac=-0.1), dict(max_steps=0), dict(balance="hsfc"),
+    dict(vertex_layout="diagonal"),
+    dict(vertex_layout="owned"),               # needs backend='sharded'
+    dict(vertex_layout="owned", backend="host"),
 ])
 def test_adapt_spec_validates_fields(bad):
     with pytest.raises(ValueError):
@@ -95,6 +98,13 @@ def test_resolve_variants_per_problem_kind():
     assert v["solve"] == "backward_euler"
     assert v["adapt_mesh"] == "coarsen_refine"
     assert v["transfer"] == "p1" and v["balance"] == "sharded"
+    # owned vertices swap the solve stage for the halo-exchange twin
+    v = resolve_adapt_variants(AdaptSpec.for_problem(
+        "helmholtz", backend="sharded", vertex_layout="owned"))
+    assert v["solve"] == "stationary_owned"
+    v = resolve_adapt_variants(AdaptSpec.for_problem(
+        "parabolic", backend="sharded", vertex_layout="owned"))
+    assert v["solve"] == "backward_euler_owned"
 
 
 def test_adapt_registry_error_surfaces():
