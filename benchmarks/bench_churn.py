@@ -1,0 +1,223 @@
+"""Incremental-rebalance churn sweep: rebalance cost vs per-step delta.
+
+The paper's premise is that adaptive steps touch a small fraction of the
+mesh, so a rebalance should cost O(delta), not O(mesh).  This sweep
+measures all three incremental paths against their from-scratch twins
+across churn fractions f (the fraction of elements whose position /
+part changed since the last step), asserting bit-exact parity at every
+point:
+
+* ``ksection``  warm-started k-section (boxes seeded from the previous
+                step's splitters) vs a cold full-range search, host
+                ``Balancer`` with ``method='hsfc'``.  Cost = histogram
+                rounds; the warm path adds ONE validation histogram for
+                its seeded boxes, so hist calls = rounds + 1.  Part
+                assignments asserted bit-equal (integer weights).
+* ``keys``      ``refresh_key_cache`` delta re-key of the blocks holding
+                the f-dirty items against the frozen bounding box vs a
+                full re-key.  Keys asserted bit-equal (box pinned by
+                two sentinel extreme points that never move).
+* ``halo``      ``update_halo_plan`` from the (old, new) part delta vs
+                ``build_halo_plan`` from scratch, on a localized churn
+                window of an x-slab partition (so the affected-part set
+                A scales with f).  Plans asserted field-by-field equal.
+
+The committed ``--quick`` baseline shows each cost falling as the churn
+fraction does -- the incremental-rebalance claim in one JSON record.
+
+Standalone:
+
+    python -m benchmarks.bench_churn --quick --json BENCH_churn.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Balancer, BalanceSpec
+from repro.core.sfc import refresh_key_cache
+from repro.fem.halo import build_halo_plan, update_halo_plan
+from repro.fem.mesh import unit_cube_mesh
+
+CHURN_FRACS = (0.01, 0.05, 0.2, 0.5, 1.0)
+QUICK_FRACS = (0.01, 0.2, 1.0)
+
+
+def _time_us(fn, *args, repeats=3):
+    out = fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return min(ts) * 1e6, out
+
+
+def _churn_coords(rng, coords, frac, localized=False):
+    """Re-randomize a ``frac`` fraction of the points (rows 0/1 pinned:
+    they hold the exact bounding-box corners, so the frozen and live
+    boxes agree and full/delta re-keys are comparable bit-for-bit).
+
+    ``localized`` churns one contiguous index window -- the shape of a
+    refinement delta, where the touched leaves are consecutive in DFS
+    order and the dirty set covers few key-cache blocks."""
+    n = coords.shape[0]
+    m = max(1, int(round(frac * (n - 2))))
+    if localized:
+        start = int(rng.integers(2, n - m + 1))
+        idx = np.arange(start, start + m)
+    else:
+        idx = rng.choice(np.arange(2, n), size=m, replace=False)
+    out = coords.copy()
+    out[idx] = rng.random((m, 3)).astype(np.float32)
+    return out, idx
+
+
+def ksection_bench(n, p, fracs, rng, repeats=3):
+    """Warm vs cold k-section rounds after churning f of the coords."""
+    coords = rng.random((n, 3)).astype(np.float32)
+    coords[0], coords[1] = 0.0, 1.0
+    w = jnp.asarray(rng.integers(1, 10, n).astype(np.float32))
+    cold = Balancer.from_spec(BalanceSpec(p=p, method="hsfc", oneD="ksection"))
+    warm = Balancer.from_spec(BalanceSpec(p=p, method="hsfc", oneD="ksection",
+                                          warm_start=True))
+    base = cold.balance(w, coords=jnp.asarray(coords))
+    rows, recs = [], []
+    for f in fracs:
+        c2, _ = _churn_coords(rng, coords, f)
+        c2 = jnp.asarray(c2)
+        rc = cold.balance(w, coords=c2)
+        rw = warm.balance(w, coords=c2, warm_splitters=base.splitters)
+        # warm-started search must land on the identical partition
+        assert (np.asarray(rw.parts) == np.asarray(rc.parts)).all()
+        cold_rounds = int(rc.ksection_rounds)
+        warm_rounds = int(rw.ksection_rounds)
+        # + 1: the warm-start box-validation histogram
+        warm_hists = warm_rounds + 1
+        rows.append((f"churn/ksection/f{f}/cold_rounds", cold_rounds,
+                     cold_rounds))
+        rows.append((f"churn/ksection/f{f}/warm_hists", warm_hists,
+                     warm_rounds))
+        recs.append({"frac": f, "cold_rounds": cold_rounds,
+                     "warm_rounds": warm_rounds,
+                     "cold_hist_calls": cold_rounds,
+                     "warm_hist_calls": warm_hists,
+                     "parts_bit_equal": True})
+    return rows, {"n": n, "p": p, "sweep": recs}
+
+
+def keys_bench(n, fracs, rng, repeats=3):
+    """Delta re-key of dirty blocks vs full re-key, bit-equal keys."""
+    coords = rng.random((n, 3)).astype(np.float32)
+    coords[0], coords[1] = 0.0, 1.0
+    cache, _ = refresh_key_cache(None, coords)
+    rows, recs = [], []
+    for f in fracs:
+        c2, idx = _churn_coords(rng, coords, f, localized=True)
+        dirty = np.zeros(n, bool)
+        dirty[idx] = True
+        t_delta, (dc, dinfo) = _time_us(refresh_key_cache, cache, c2,
+                                        dirty, repeats=repeats)
+        t_full, (fc, _) = _time_us(refresh_key_cache, None, c2,
+                                   repeats=repeats)
+        assert dinfo["mode"] == "delta", dinfo
+        assert (dc.keys == fc.keys).all()
+        rows.append((f"churn/keys/f{f}/delta", t_delta,
+                     t_full / t_delta))
+        rows.append((f"churn/keys/f{f}/full", t_full, dinfo["n_rekeyed"]))
+        recs.append({"frac": f, "t_delta_us": t_delta, "t_full_us": t_full,
+                     "speedup": t_full / t_delta,
+                     "n_rekeyed": int(dinfo["n_rekeyed"]),
+                     "keys_bit_equal": True})
+    return rows, {"n": n, "sweep": recs}
+
+
+def _plans_equal(a, b):
+    for fld in dataclasses.fields(a):
+        x, y = getattr(a, fld.name), getattr(b, fld.name)
+        if isinstance(x, (int, tuple)):
+            if x != y:
+                return False
+        elif not np.array_equal(np.asarray(x), np.asarray(y)):
+            return False
+    return True
+
+
+def halo_bench(cube_n, p, fracs, rng, repeats=3):
+    """Delta halo-plan rebuild vs from-scratch on localized part churn."""
+    mesh = unit_cube_mesh(cube_n)
+    tets = mesh.tets.copy()
+    n, n_verts = tets.shape[0], mesh.n_verts
+    # x-slab partition: equal-count slabs along x, so churning one
+    # contiguous window of the slab order touches few parts at small f
+    order = np.argsort(mesh.barycenters()[:, 0], kind="stable")
+    parts = np.empty(n, np.int32)
+    parts[order] = (np.arange(n, dtype=np.int64) * p // n).astype(np.int32)
+    plan = build_halo_plan(tets, parts, n_verts, p)
+    rows, recs = [], []
+    for f in fracs:
+        m = max(1, int(round(f * n)))
+        start = int(rng.integers(0, n - m + 1))
+        sel = order[start:start + m]
+        parts2 = parts.copy()
+        parts2[sel] = np.clip(parts[sel] + rng.integers(-1, 2, m), 0, p - 1)
+        t_delta, (dp, dinfo) = _time_us(
+            update_halo_plan, plan, tets, parts, tets, parts2, n_verts, p,
+            repeats=repeats)
+        t_full, fp = _time_us(build_halo_plan, tets, parts2, n_verts, p,
+                              repeats=repeats)
+        assert _plans_equal(dp, fp)
+        rows.append((f"churn/halo/f{f}/delta", t_delta, t_full / t_delta))
+        rows.append((f"churn/halo/f{f}/full", t_full,
+                     dinfo.get("n_affected_parts", p)))
+        recs.append({"frac": f, "t_delta_us": t_delta, "t_full_us": t_full,
+                     "speedup": t_full / t_delta, "mode": dinfo["mode"],
+                     "n_affected_parts": int(
+                         dinfo.get("n_affected_parts", p)),
+                     "plan_bit_equal": True})
+    return rows, {"n_tets": n, "n_verts": n_verts, "p": p, "sweep": recs}
+
+
+def run(quick=False, fracs=None, repeats=3):
+    if fracs is None:
+        fracs = QUICK_FRACS if quick else CHURN_FRACS
+    rng = np.random.default_rng(0)
+    n = 30_000 if quick else 200_000
+    p = 16 if quick else 64
+    cube_n = 10 if quick else 20
+    halo_p = 16 if quick else 32
+    rows = []
+    ks_rows, ks_rec = ksection_bench(n, p, fracs, rng, repeats=repeats)
+    key_rows, key_rec = keys_bench(n, fracs, rng, repeats=repeats)
+    halo_rows, halo_rec = halo_bench(cube_n, halo_p, fracs, rng,
+                                     repeats=repeats)
+    rows += ks_rows + key_rows + halo_rows
+    record = {"bench": "churn", "backend": jax.default_backend(),
+              "fracs": list(fracs), "ksection": ks_rec, "keys": key_rec,
+              "halo": halo_rec}
+    return rows, record
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a BENCH_churn.json record to PATH")
+    args = ap.parse_args()
+    rows, record = run(quick=args.quick)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

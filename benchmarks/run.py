@@ -9,6 +9,9 @@ Each module maps to one paper table/figure (DESIGN.md section 8):
     bench_parabolic       Tables 2-3               Example 3.2
     bench_aspect_ratio    section 2.2 PHG vs Zoltan box-map quality
     bench_beyond          beyond-paper: MoE dispatch / packing / 1-D
+    bench_churn           incremental rebalance: warm k-section rounds,
+                          delta re-key, delta halo rebuild vs churn
+                          fraction (``--only churn``)
 
 ``--json DIR`` aggregates each suite's machine-readable record into
 ``DIR/BENCH_<suite>.json`` (suites without a record are skipped) so the
@@ -32,7 +35,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_adaptive_solve, bench_aspect_ratio, bench_beyond,
-                   bench_dlb, bench_parabolic, bench_partition)
+                   bench_churn, bench_dlb, bench_parabolic, bench_partition)
 
     # every suite yields (rows, json_record_or_None)
     suites = {
@@ -44,10 +47,15 @@ def main() -> None:
             n_steps=2 if args.quick else 3),
         "aspect_ratio": lambda: (bench_aspect_ratio.run(), None),
         "beyond": lambda: (bench_beyond.run(), None),
+        "churn": lambda: bench_churn.run(quick=args.quick),
     }
+    if args.only and args.only not in suites:
+        ap.error(f"unknown suite {args.only!r} "
+                 f"(choose from {', '.join(suites)})")
     if args.json:
         os.makedirs(args.json, exist_ok=True)
     print("name,us_per_call,derived")
+    n_errors = 0
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
@@ -61,8 +69,11 @@ def main() -> None:
                 with open(path, "w") as f:
                     json.dump(record, f, indent=2, sort_keys=True)
                 print(f"# wrote {path}")
-        except Exception as e:  # keep the harness running
+        except Exception as e:  # keep the harness running, but tell CI
+            n_errors += 1
             print(f"{name}/ERROR,0,{e!r}")
+    if n_errors:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

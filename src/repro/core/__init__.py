@@ -11,12 +11,14 @@ from .balancer import (DynamicLoadBalancer, LegacyBalanceResult,
 from .metrics import imbalance, migration_volume, quality
 from .partition1d import (Partition1DResult, distributed_prefix_parts,
                           exclusive_scan_over_axis, ksection,
-                          prefix_sum_parts, sorted_exact)
+                          ksection_splitters_counted, prefix_sum_parts,
+                          sorted_exact, warm_start_boxes)
 from .rcb import rcb_partition
 from .remap import apply_map, greedy_map, greedy_map_jnp, remap, similarity_matrix
 from .rtree import RefinementForest, partition_dfs, rtk_partition_forest
-from .sfc import (bounding_box, box_map, hilbert_decode, hilbert_encode,
-                  morton_decode, morton_encode, sfc_keys)
+from .sfc import (KeyCache, bounding_box, box_drift, box_map,
+                  hilbert_decode, hilbert_encode, morton_decode,
+                  morton_encode, refresh_key_cache, sfc_keys)
 from .spec import (BACKENDS, METHODS, ONED_SOLVERS, SFC_METHODS, STAGES,
                    Balancer, BalanceResult, BalanceSpec, Spec, compute_cut,
                    get_stage, register_spec_pytree, register_stage,
@@ -25,14 +27,17 @@ from .spec import (BACKENDS, METHODS, ONED_SOLVERS, SFC_METHODS, STAGES,
 __all__ = [
     "BACKENDS", "METHODS", "ONED_SOLVERS", "SFC_METHODS", "STAGES",
     "BalanceResult", "BalanceSpec", "Balancer", "DynamicLoadBalancer",
-    "LegacyBalanceResult", "Partition1DResult", "RefinementForest",
-    "apply_map", "bounding_box", "box_map", "compute_cut",
+    "KeyCache", "LegacyBalanceResult", "Partition1DResult",
+    "RefinementForest",
+    "apply_map", "bounding_box", "box_drift", "box_map", "compute_cut",
     "distributed_prefix_parts", "exclusive_scan_over_axis", "get_stage",
     "greedy_map", "greedy_map_jnp", "imbalance", "ksection",
+    "ksection_splitters_counted",
     "migration_volume", "morton_decode", "morton_encode", "partition_dfs",
-    "prefix_sum_parts", "quality", "rcb_partition", "register_spec_pytree",
+    "prefix_sum_parts", "quality", "rcb_partition", "refresh_key_cache",
+    "register_spec_pytree",
     "register_stage", "remap", "resolve_variants", "rtk_partition_forest",
     "Spec",
     "similarity_matrix", "sfc_keys", "sorted_exact", "stage_variants",
-    "hilbert_decode", "hilbert_encode",
+    "hilbert_decode", "hilbert_encode", "warm_start_boxes",
 ]

@@ -34,6 +34,7 @@ class Partition1DResult(NamedTuple):
     parts: jax.Array        # (n,) int32 part id per item
     splitters: jax.Array    # (p-1,) float32/float64 key-space cut points
     part_weights: jax.Array  # (p,) weight per part
+    rounds: Optional[jax.Array] = None  # k-section rounds actually run
 
 
 # ---------------------------------------------------------------------------
@@ -60,12 +61,18 @@ def sorted_exact(keys: jax.Array, weights: jax.Array, p: int) -> Partition1DResu
     # scatter back to original item order
     parts = jnp.zeros_like(parts_sorted).at[order].set(parts_sorted)
     part_weights = jax.ops.segment_sum(weights, parts, num_segments=p)
-    # splitters: key at each first-item-of-part boundary (for diagnostics)
     ksorted = keys[order].astype(jnp.float32)
-    # boundary index of part j = first i with parts_sorted[i] == j
+    # Splitter rule (explicit, empty-part safe): a_j = key of the first
+    # item assigned to parts >= j, or max_key + 1 when every item lies
+    # below part j.  An empty part collapses onto the next boundary --
+    # a duplicated but still monotone splitter, which the warm-start box
+    # validation detects (zero-width box) instead of being poisoned by
+    # out-of-order cuts.
+    n = keys.shape[0]
     idx = jnp.searchsorted(parts_sorted, jnp.arange(1, p))
-    idx = jnp.clip(idx, 0, keys.shape[0] - 1)
-    return Partition1DResult(parts, ksorted[idx], part_weights)
+    past_end = ksorted[n - 1] + 1.0
+    splitters = jnp.where(idx < n, ksorted[jnp.minimum(idx, n - 1)], past_end)
+    return Partition1DResult(parts, jnp.sort(splitters), part_weights)
 
 
 # ---------------------------------------------------------------------------
@@ -98,8 +105,10 @@ def weight_below(keys: jax.Array, weights: jax.Array,
     return jnp.zeros_like(below_sorted).at[order].set(below_sorted)
 
 
-def ksection_splitters(targets: jax.Array, blo: jax.Array, bhi: jax.Array,
-                       hist_fn, *, k: int, iters: int) -> jax.Array:
+def ksection_splitters_counted(
+        targets: jax.Array, blo: jax.Array, bhi: jax.Array, hist_fn, *,
+        k: int, iters: int, tol: float = 0.0
+) -> Tuple[jax.Array, jax.Array]:
     """The k-section box-shrinking search, shared by every backend.
 
     Maintains a bounding box [blo_i, bhi_i] per splitter a_i (i=1..p-1).
@@ -112,6 +121,24 @@ def ksection_splitters(targets: jax.Array, blo: jax.Array, bhi: jax.Array,
     its target W*i/p.  ``iters`` rounds give k^-iters relative key-space
     precision.
 
+    ``tol > 0`` stops early once every box is narrower than ``tol`` (the
+    incremental-rebalance win: warm-started boxes converge in a couple
+    of rounds).  Boxes that stop shrinking (float32 resolution) also
+    count as converged, so the loop never spins on stalled boxes; with
+    ``tol=0`` it runs until every box stalls or ``iters`` is reached --
+    identical splitters to the fixed-count loop, never more rounds.
+    Returns ``(splitters, rounds)`` where ``rounds`` is the number of
+    histogram rounds actually executed.
+
+    The final splitter is the *lower* bound of each converged box.  The
+    search invariant F(blo) <= target < F(bhi) (F = weight strictly
+    below) pins blo into the half-open gap (prev_key, crossing_key] once
+    the box is narrower than the local key spacing, so any two converged
+    searches -- cold full-range or warm-started from stale cuts --
+    produce splitters that induce IDENTICAL part assignments under
+    ``searchsorted(..., side='right')``.  A midpoint rule would not:
+    the midpoint can land on either side of the crossing key.
+
     ``hist_fn`` receives the flattened (box-major, UNSORTED) candidate
     grid and must return the weight strictly below each cut in the same
     order -- implementations that need sorted cuts (``weight_below``)
@@ -119,8 +146,19 @@ def ksection_splitters(targets: jax.Array, blo: jax.Array, bhi: jax.Array,
     """
     fdt = targets.dtype
 
-    def round_fn(_, state):
-        blo, bhi = state
+    def cond_fn(state):
+        blo, bhi, i, prev_w = state
+        width = bhi - blo
+        # a box still needs work if it is wider than tol AND it shrank
+        # last round; a box that can no longer shrink has hit float32
+        # resolution -- its width equals the local key spacing, which is
+        # as converged as the key space allows (parity-safe: no key can
+        # lie strictly inside such a box)
+        working = jnp.logical_and(width > tol, width < prev_w)
+        return jnp.logical_and(i < iters, jnp.any(working))
+
+    def body_fn(state):
+        blo, bhi, i, _ = state
         # candidate cuts: k interior points per box -> ((p-1), k)
         frac = jnp.arange(1, k + 1, dtype=fdt) / (k + 1)
         cand = blo[:, None] + (bhi - blo)[:, None] * frac[None, :]
@@ -133,25 +171,89 @@ def ksection_splitters(targets: jax.Array, blo: jax.Array, bhi: jax.Array,
         gt = ~le
         new_hi = jnp.where(gt.any(axis=1),
                            jnp.min(jnp.where(gt, cand, jnp.inf), axis=1), bhi)
-        return jnp.maximum(new_lo, blo), jnp.minimum(new_hi, bhi)
+        return (jnp.maximum(new_lo, blo), jnp.minimum(new_hi, bhi),
+                i + jnp.int32(1), bhi - blo)
 
-    blo, bhi = jax.lax.fori_loop(0, iters, round_fn, (blo, bhi))
-    # enforce monotonicity against fp noise
-    return jnp.sort(0.5 * (blo + bhi))
+    blo, bhi, rounds, _ = jax.lax.while_loop(
+        cond_fn, body_fn,
+        (blo, bhi, jnp.zeros((), jnp.int32),
+         jnp.full(targets.shape, jnp.inf, fdt)))
+    # sort: monotone against fp noise (boxes are clamped monotone already)
+    return jnp.sort(blo), rounds
 
 
-@functools.partial(jax.jit, static_argnames=("p", "k", "iters", "hist_fn"))
+def ksection_splitters(targets: jax.Array, blo: jax.Array, bhi: jax.Array,
+                       hist_fn, *, k: int, iters: int,
+                       tol: float = 0.0) -> jax.Array:
+    """Splitters-only wrapper of :func:`ksection_splitters_counted`."""
+    return ksection_splitters_counted(
+        targets, blo, bhi, hist_fn, k=k, iters=iters, tol=tol)[0]
+
+
+def warm_start_boxes(prev: jax.Array, lo: jax.Array, hi: jax.Array,
+                     targets: jax.Array, hist_fn, *, k: int = 8,
+                     tight_frac: Optional[float] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Search boxes seeded from the previous step's splitters.
+
+    Two candidate boxes per splitter, narrowest valid wins:
+
+      * tight:      prev_i +- tight_frac * neighbour gap (small churn:
+                    the crossing barely moved, a couple of rounds finish)
+      * neighbour:  [prev_{i-1}, prev_{i+1}] (domain edges at the ends;
+                    always brackets the crossing under moderate churn)
+
+    One extra ``hist_fn`` call evaluates F at all four edges; a box is
+    valid iff F(blo) <= target < F(bhi) -- the search invariant.  That
+    single check rejects degenerate zero-width boxes from duplicated
+    splitters (empty parts), stale cuts after heavy churn, and repeated
+    keys; invalid boxes reset to the full range [lo, hi], so the warm
+    path can never be *worse* than a cold start by more than this one
+    histogram round.
+    """
+    fdt = targets.dtype
+    prev = jnp.sort(jnp.asarray(prev, fdt))
+    lo = jnp.asarray(lo, fdt)
+    hi = jnp.asarray(hi, fdt)
+    if tight_frac is None:
+        tight_frac = 1.0 / ((k + 1) ** 2)
+    nlo = jnp.clip(jnp.concatenate([lo[None], prev[:-1]]), lo, hi)
+    nhi = jnp.clip(jnp.concatenate([prev[1:], hi[None]]), lo, hi)
+    m = (nhi - nlo) * jnp.asarray(tight_frac, fdt)
+    tlo = jnp.clip(prev - m, lo, hi)
+    thi = jnp.clip(prev + m, lo, hi)
+    q = prev.shape[0]
+    below = hist_fn(jnp.concatenate([tlo, thi, nlo, nhi]))
+    f_tlo, f_thi = below[:q], below[q:2 * q]
+    f_nlo, f_nhi = below[2 * q:3 * q], below[3 * q:]
+    t_ok = (thi > tlo) & (f_tlo <= targets) & (f_thi > targets)
+    n_ok = (nhi > nlo) & (f_nlo <= targets) & (f_nhi > targets)
+    blo = jnp.where(t_ok, tlo, jnp.where(n_ok, nlo, lo))
+    bhi = jnp.where(t_ok, thi, jnp.where(n_ok, nhi, hi))
+    return blo, bhi
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("p", "k", "iters", "hist_fn", "tol"))
 def ksection(keys: jax.Array, weights: jax.Array, p: int, *,
              k: int = 8, iters: int = 12,
              lo: Optional[jax.Array] = None,
              hi: Optional[jax.Array] = None,
-             hist_fn=None) -> Partition1DResult:
+             hist_fn=None, warm: Optional[jax.Array] = None,
+             tol: float = 0.0) -> Partition1DResult:
     """The paper's 1-D partitioner (host/local form of the search).
 
     ``hist_fn(keys, weights, cuts) -> below`` overrides the per-round
     histogram implementation (default: ``weight_below``; pass e.g.
     ``kernels.ops.ksection_histogram_op`` to run the fused Pallas
     kernel).  Static under jit -- reuse one callable across calls.
+
+    ``warm`` seeds the search boxes from a previous step's (p-1,)
+    splitters (see :func:`warm_start_boxes`); with ``tol > 0`` the
+    search then stops as soon as every box has converged, so the cost
+    of a repartition tracks how far the cuts actually moved.  On
+    integer-valued keys a converged warm search is bit-identical to the
+    cold one in its part assignments.
     """
     fdt = jnp.float32
     kf = keys.astype(fdt)
@@ -159,16 +261,21 @@ def ksection(keys: jax.Array, weights: jax.Array, p: int, *,
     total = jnp.sum(w)
     targets = total * jnp.arange(1, p, dtype=fdt) / p      # (p-1,)
 
-    blo = jnp.full((p - 1,), jnp.min(kf) if lo is None else lo, dtype=fdt)
-    bhi = jnp.full((p - 1,), jnp.max(kf) + 1 if hi is None else hi, dtype=fdt)
+    lo_s = jnp.min(kf) if lo is None else jnp.asarray(lo, fdt)
+    hi_s = jnp.max(kf) + 1 if hi is None else jnp.asarray(hi, fdt)
 
     hist = weight_below if hist_fn is None else hist_fn
-    splitters = ksection_splitters(
-        targets, blo, bhi, lambda cuts: hist(kf, w, cuts),
-        k=k, iters=iters)
+    hfn = lambda cuts: hist(kf, w, cuts)
+    if warm is not None:
+        blo, bhi = warm_start_boxes(warm, lo_s, hi_s, targets, hfn, k=k)
+    else:
+        blo = jnp.full((p - 1,), lo_s, dtype=fdt)
+        bhi = jnp.full((p - 1,), hi_s, dtype=fdt)
+    splitters, rounds = ksection_splitters_counted(
+        targets, blo, bhi, hfn, k=k, iters=iters, tol=tol)
     parts = jnp.searchsorted(splitters, kf, side="right").astype(jnp.int32)
     part_weights = jax.ops.segment_sum(w, parts, num_segments=p)
-    return Partition1DResult(parts, splitters, part_weights)
+    return Partition1DResult(parts, splitters, part_weights, rounds)
 
 
 # ---------------------------------------------------------------------------

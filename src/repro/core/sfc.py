@@ -21,11 +21,13 @@ generation hot spot also has a Pallas TPU kernel in
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Default bits per axis: 10 bits -> 2^30 distinct cells, matching typical
 # SFC partitioner granularity (Zoltan uses similar).  Keys fit in uint32.
@@ -245,3 +247,107 @@ def sfc_keys(coords: jax.Array, lo: jax.Array, hi: jax.Array, *,
     elif curve == "morton":
         return morton_encode(grid, bits)
     raise ValueError(f"unknown curve {curve!r}")
+
+
+# ---------------------------------------------------------------------------
+# Incremental re-keying: cached keys against a frozen bounding box
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KeyCache:
+    """SFC keys cached against a FROZEN bounding box.
+
+    Adaptive refinement only replaces a few leaves per step, so most keys
+    from the previous rebalance are still valid -- *if* the box they were
+    generated against is held fixed.  The cache therefore freezes the
+    bounding box at build time and re-keys only dirty items (in blocks,
+    through one jitted ``sfc_keys`` call on a pow2-padded gather) until
+    the live box drifts more than ``drift_tol`` of the frozen extent,
+    at which point every key is stale and a full re-key against the new
+    box happens (the invalidation rule).
+    """
+    keys: np.ndarray                # (n,) uint32
+    lo: np.ndarray                  # (3,) frozen box corner
+    hi: np.ndarray                  # (3,)
+    curve: str = "hilbert"
+    uniform: bool = True
+    bits: int = DEFAULT_BITS
+    drift_tol: float = 0.05
+    block: int = 128
+
+
+def box_drift(lo_f: np.ndarray, hi_f: np.ndarray,
+              lo: np.ndarray, hi: np.ndarray) -> float:
+    """Max corner displacement relative to the frozen box extent."""
+    extent = float(np.max(np.asarray(hi_f) - np.asarray(lo_f)))
+    extent = extent if extent > 0 else 1.0
+    move = max(float(np.max(np.abs(np.asarray(lo) - np.asarray(lo_f)))),
+               float(np.max(np.abs(np.asarray(hi) - np.asarray(hi_f)))))
+    return move / extent
+
+
+def refresh_key_cache(cache: Optional[KeyCache], coords,
+                      dirty: Optional[np.ndarray] = None, *,
+                      curve: str = "hilbert", uniform: bool = True,
+                      bits: int = DEFAULT_BITS, drift_tol: float = 0.05,
+                      block: int = 128) -> Tuple[KeyCache, Dict]:
+    """Bring a :class:`KeyCache` up to date with ``coords``.
+
+    ``dirty`` is a boolean mask (or int index array) of items whose
+    coordinates changed since the cache was built (e.g. leaves touched
+    by refinement/coarsening).  A full re-key happens when the cache is
+    absent, its parameters or length disagree, or the live bounding box
+    drifted beyond ``drift_tol``; otherwise only the blocks containing
+    dirty items are re-keyed against the frozen box, so the cost scales
+    with the churn, not the mesh.  Returns ``(cache, info)`` with
+    ``info = {mode, n_rekeyed, drift, n_blocks}``.
+    """
+    coords_np = np.asarray(coords, np.float32)
+    n = coords_np.shape[0]
+    lo_now = coords_np.min(axis=0)
+    hi_now = coords_np.max(axis=0)
+
+    def full():
+        keys = np.asarray(sfc_keys(jnp.asarray(coords_np),
+                                   jnp.asarray(lo_now), jnp.asarray(hi_now),
+                                   curve=curve, uniform=uniform, bits=bits))
+        c = KeyCache(keys=keys, lo=lo_now, hi=hi_now, curve=curve,
+                     uniform=uniform, bits=bits, drift_tol=drift_tol,
+                     block=block)
+        return c, {"mode": "full", "n_rekeyed": n, "drift": drift,
+                   "n_blocks": -(-n // block)}
+
+    drift = 0.0
+    if (cache is None or cache.keys.shape[0] != n or cache.curve != curve
+            or cache.uniform != uniform or cache.bits != bits):
+        return full()
+    drift = box_drift(cache.lo, cache.hi, lo_now, hi_now)
+    if drift > drift_tol:
+        return full()
+
+    if dirty is None:
+        dirty_idx = np.empty(0, np.int64)
+    else:
+        dirty = np.asarray(dirty)
+        dirty_idx = np.flatnonzero(dirty) if dirty.dtype == bool else dirty
+    if dirty_idx.size == 0:
+        return cache, {"mode": "delta", "n_rekeyed": 0, "drift": drift,
+                       "n_blocks": 0}
+
+    # Re-key whole blocks so the jitted gather sees at most log2 distinct
+    # shapes: pad the dirty-block count to the next power of two (extra
+    # slots recompute block 0 -- same values, harmless writes).
+    blocks = np.unique(dirty_idx // block)
+    nb = int(blocks.size)
+    nb_pad = 1 << (nb - 1).bit_length()
+    blocks = np.concatenate([blocks, np.zeros(nb_pad - nb, np.int64)])
+    idx = (blocks[:, None] * block + np.arange(block)[None, :]).reshape(-1)
+    idx = np.minimum(idx, n - 1)
+    sub_keys = np.asarray(sfc_keys(
+        jnp.asarray(coords_np[idx]), jnp.asarray(cache.lo),
+        jnp.asarray(cache.hi), curve=curve, uniform=uniform, bits=bits))
+    keys = cache.keys.copy()
+    keys[idx] = sub_keys
+    cache = dataclasses.replace(cache, keys=keys)
+    return cache, {"mode": "delta", "n_rekeyed": int(nb * block),
+                   "drift": drift, "n_blocks": nb}

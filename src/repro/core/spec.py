@@ -157,6 +157,18 @@ class BalanceSpec(Spec):
                        histogram kernel (the 'ksection_pallas' stage
                        variant).  None = auto: TPU only; True forces
                        the kernels (interpret mode off-TPU)
+    warm_start         oneD='ksection': seed each repartition's search
+                       boxes from the previous step's splitters (the
+                       Balancer remembers them between calls); a single
+                       validation histogram rejects stale boxes, so
+                       results stay bit-identical to a cold start once
+                       the search converges
+    ksection_tol       stop the k-section search once every splitter box
+                       is narrower than this (0 = always run ``iters``
+                       rounds).  With integer keys any tol < 1 keeps the
+                       converged cuts exact; combined with warm_start
+                       this is what makes repartition cost track the
+                       churn instead of the mesh size
     """
     p: int
     method: str = "hsfc"
@@ -170,6 +182,8 @@ class BalanceSpec(Spec):
     min_capacity: int = 64
     execute_migration: bool = True
     use_pallas: Optional[bool] = None
+    warm_start: bool = False
+    ksection_tol: float = 0.0
 
     def __post_init__(self):
         if self.p < 1:
@@ -222,11 +236,14 @@ class BalanceResult:
     retained: jax.Array       # () weight that stayed put
     remap_perm: jax.Array     # (p,) process assigned to each new part
     migration: Optional[Dict[str, jax.Array]] = None
+    splitters: Optional[jax.Array] = None       # (p-1,) 1-D cuts, if any
+    ksection_rounds: Optional[jax.Array] = None  # () rounds actually run
 
 
 def _result_flatten(r: BalanceResult):
     return ((r.parts, r.part_weights, r.imbalance, r.total_v, r.max_v,
-             r.retained, r.remap_perm, r.migration), None)
+             r.retained, r.remap_perm, r.migration, r.splitters,
+             r.ksection_rounds), None)
 
 
 def _result_unflatten(_aux, ch) -> BalanceResult:
@@ -343,24 +360,38 @@ def _keys_linear_host(spec: BalanceSpec, coords, weights):
     return coords[:, 0]
 
 
+@register_stage("host", "keys", "cached")
+def _keys_cached_host(spec: BalanceSpec, coords, weights, *, keys):
+    """Pass-through for precomputed keys (the incremental ``KeyCache``
+    path: keys were re-keyed on the host against a frozen bounding box,
+    so the in-pipeline box computation is skipped entirely)."""
+    return keys
+
+
 @register_stage("host", "partition1d", "sorted")
-def _partition_sorted_host(spec: BalanceSpec, keys, weights, coords):
-    return _p1d.sorted_exact(keys, weights, spec.p).parts
+def _partition_sorted_host(spec: BalanceSpec, keys, weights, coords,
+                           warm=None):
+    r = _p1d.sorted_exact(keys, weights, spec.p)
+    return r.parts, {"splitters": r.splitters}
 
 
 @register_stage("host", "partition1d", "ksection")
-def _partition_ksection_host(spec: BalanceSpec, keys, weights, coords):
-    return _p1d.ksection(keys, weights, spec.p,
-                         k=spec.k, iters=spec.iters).parts
+def _partition_ksection_host(spec: BalanceSpec, keys, weights, coords,
+                             warm=None):
+    r = _p1d.ksection(keys, weights, spec.p, k=spec.k, iters=spec.iters,
+                      warm=warm, tol=spec.ksection_tol)
+    return r.parts, {"splitters": r.splitters, "ksection_rounds": r.rounds}
 
 
 @register_stage("host", "partition1d", "rtk")
-def _partition_rtk_host(spec: BalanceSpec, keys, weights, coords):
+def _partition_rtk_host(spec: BalanceSpec, keys, weights, coords,
+                        warm=None):
     return partition_dfs(weights, spec.p)
 
 
 @register_stage("host", "partition1d", "rcb")
-def _partition_rcb_host(spec: BalanceSpec, keys, weights, coords):
+def _partition_rcb_host(spec: BalanceSpec, keys, weights, coords,
+                        warm=None):
     return rcb_partition(coords, weights, spec.p)
 
 
@@ -412,8 +443,11 @@ class Balancer:
     def __init__(self, spec: BalanceSpec, *, devices=None):
         self.spec = spec
         self._variants = resolve_variants(spec)
-        self._jitted: Dict[bool, Callable] = {}
+        self._jitted: Dict[Tuple[bool, bool, bool], Callable] = {}
         self._compiled: Dict[Tuple[int, bool], Callable] = {}
+        # previous step's splitters, auto-threaded as warm-start boxes
+        # into the next ksection call when spec.warm_start is set
+        self._last_splitters: Optional[jax.Array] = None
         self.mesh = None
         if spec.backend == "sharded":
             # registers the sharded stages and builds the device mesh;
@@ -443,23 +477,33 @@ class Balancer:
         Inputs must already respect the backend's shape contract (the
         ``balance`` wrapper handles that): sharded inputs have length
         ``p * C``; ``old_parts`` may be ``None`` (static).  Padded items
-        carry ``spec.pad_part`` in ``old_parts``."""
+        carry ``spec.pad_part`` in ``old_parts``.  ``keys`` short-circuits
+        the keys stage with precomputed (cached) SFC keys; ``warm`` seeds
+        the k-section search boxes with a previous step's splitters."""
         if self.spec.backend == "sharded":
-            def fn(weights, coords, old_parts=None):
-                return self._sharded_apply(weights, coords, old_parts)
+            def fn(weights, coords, old_parts=None, keys=None, warm=None):
+                return self._sharded_apply(weights, coords, old_parts,
+                                           keys, warm)
         else:
-            def fn(weights, coords, old_parts=None):
-                return self._host_pipeline(weights, coords, old_parts)
+            def fn(weights, coords, old_parts=None, keys=None, warm=None):
+                return self._host_pipeline(weights, coords, old_parts,
+                                           keys, warm)
         return fn
 
-    def _host_pipeline(self, weights, coords, old_parts) -> BalanceResult:
+    def _host_pipeline(self, weights, coords, old_parts, pre_keys=None,
+                       warm=None) -> BalanceResult:
         spec = self.spec
         p = spec.p
         kv = self._variants["keys"]
-        keys = (get_stage("host", "keys", kv)(spec, coords, weights)
-                if kv is not None else None)
-        new = get_stage("host", "partition1d", self._variants["partition1d"])(
-            spec, keys, weights, coords)
+        if pre_keys is not None and kv is not None:
+            keys = get_stage("host", "keys", "cached")(
+                spec, coords, weights, keys=pre_keys)
+        else:
+            keys = (get_stage("host", "keys", kv)(spec, coords, weights)
+                    if kv is not None else None)
+        out = get_stage("host", "partition1d", self._variants["partition1d"])(
+            spec, keys, weights, coords, warm=warm)
+        new, p1d_aux = out if isinstance(out, tuple) else (out, {})
         perm = jnp.arange(p, dtype=jnp.int32)
         zero = jnp.zeros((), jnp.float32)
         total_v, max_v, retained = zero, zero, zero
@@ -475,15 +519,18 @@ class Balancer:
         imb = _metrics.imbalance_of_part_weights(pw)
         return BalanceResult(parts=new, part_weights=pw, imbalance=imb,
                              total_v=total_v, max_v=max_v, retained=retained,
-                             remap_perm=perm, migration=None)
+                             remap_perm=perm, migration=None,
+                             splitters=p1d_aux.get("splitters"),
+                             ksection_rounds=p1d_aux.get("ksection_rounds"))
 
-    def _sharded_apply(self, weights, coords, old_parts) -> BalanceResult:
+    def _sharded_apply(self, weights, coords, old_parts, pre_keys=None,
+                       warm=None) -> BalanceResult:
         has_old = old_parts is not None
-        fn = self._stages_mod.build_balance_fn(self.spec, self.mesh, has_old)
-        if has_old:
-            parts, aux = fn(weights, coords, old_parts)
-        else:
-            parts, aux = fn(weights, coords)
+        fn = self._stages_mod.build_balance_fn(
+            self.spec, self.mesh, has_old,
+            has_keys=pre_keys is not None, has_warm=warm is not None)
+        opts = [x for x in (old_parts, pre_keys, warm) if x is not None]
+        parts, aux = fn(weights, coords, *opts)
         zero = jnp.zeros((), jnp.float32)
         return BalanceResult(
             parts=parts, part_weights=aux["part_weights"],
@@ -492,7 +539,9 @@ class Balancer:
             retained=aux.get("retained", zero),
             remap_perm=aux.get("remap_perm",
                                jnp.arange(self.spec.p, dtype=jnp.int32)),
-            migration=aux.get("migration"))
+            migration=aux.get("migration"),
+            splitters=aux.get("splitters"),
+            ksection_rounds=aux.get("ksection_rounds"))
 
     # -- padding policy (host-side shape management) ------------------------
     def capacity_for(self, n: int) -> int:
@@ -503,7 +552,7 @@ class Balancer:
             C <<= 1
         return C
 
-    def _pad(self, weights, coords, old_parts):
+    def _pad(self, weights, coords, old_parts, keys=None):
         spec = self.spec
         n = int(weights.shape[0])
         if coords is None and spec.method in SFC_METHODS + ("rcb",):
@@ -532,6 +581,16 @@ class Balancer:
             n_pad = 1 << max(int(np.ceil(np.log2(max(n, 2)))), 1)
         else:
             n_pad = n
+        ks = None
+        if keys is not None:
+            if self._variants["keys"] is None:
+                raise ValueError(
+                    f"method {spec.method!r} has no keys stage; "
+                    "precomputed keys only apply to SFC/linear methods")
+            if int(keys.shape[0]) != n:
+                raise ValueError(
+                    f"keys has {keys.shape[0]} items, weights {n}")
+            ks = jnp.asarray(keys)
         if n_pad != n:
             w = jnp.concatenate([w, jnp.zeros(n_pad - n, w.dtype)])
             if xyz is not None:
@@ -542,34 +601,56 @@ class Balancer:
                 # remap similarity and every migration metric
                 old = jnp.concatenate(
                     [old, jnp.full(n_pad - n, spec.pad_part, jnp.int32)])
-        return w, xyz, old, n
+            if ks is not None:
+                # padded items carry zero weight: their key only has to
+                # keep them inside the box (repeat the last real key)
+                ks = jnp.concatenate(
+                    [ks, jnp.broadcast_to(ks[-1:], (n_pad - n,))])
+        return w, xyz, old, ks, n
 
     # -- host-facing entry points -------------------------------------------
-    def balance(self, weights, *, coords=None, old_parts=None
-                ) -> BalanceResult:
-        """Pad per policy, run the (cached, jitted) pipeline, truncate."""
-        w, xyz, old, n = self._pad(weights, coords, old_parts)
-        has_old = old is not None
-        if has_old not in self._jitted:
-            self._jitted[has_old] = jax.jit(self.balance_fn)
-        fn = self._jitted[has_old]
+    def balance(self, weights, *, coords=None, old_parts=None, keys=None,
+                warm_splitters=None) -> BalanceResult:
+        """Pad per policy, run the (cached, jitted) pipeline, truncate.
+
+        ``keys`` bypasses the keys stage with precomputed (cached) SFC
+        keys.  ``warm_splitters`` seeds the k-section boxes; when
+        ``spec.warm_start`` is set and it is omitted, the previous
+        call's splitters are threaded automatically."""
+        w, xyz, old, ks, n = self._pad(weights, coords, old_parts, keys)
+        warm = warm_splitters
+        if warm is None and self.spec.warm_start:
+            warm = self._last_splitters
+        if self._variants["partition1d"] not in ("ksection",
+                                                 "ksection_pallas"):
+            warm = None
+        if warm is not None:
+            warm = jnp.asarray(warm, jnp.float32)
+        sig = (old is not None, ks is not None, warm is not None)
+        if sig not in self._jitted:
+            self._jitted[sig] = jax.jit(self.balance_fn)
+        fn = self._jitted[sig]
         if self.spec.backend == "sharded":
             # bookkeeping: jax.jit retraces per capacity bucket, so each
             # distinct (C, has_old) key is one compiled pipeline
-            self._compiled[(self.capacity_for(n), has_old)] = fn
-        res = fn(w, xyz, old)
+            self._compiled[(self.capacity_for(n), sig[0])] = fn
+        res = fn(w, xyz, old, ks, warm)
+        if self.spec.warm_start and res.splitters is not None:
+            self._last_splitters = res.splitters
         if int(res.parts.shape[0]) != n:
             res = dataclasses.replace(res, parts=res.parts[:n])
         return res
 
-    def balance_timed(self, weights, *, coords=None, old_parts=None
+    def balance_timed(self, weights, *, coords=None, old_parts=None,
+                      keys=None, warm_splitters=None
                       ) -> Tuple[BalanceResult, Dict[str, float]]:
         """``balance`` plus a blocking wall-clock measurement.
 
         The timing wrapper is the ONLY place the pipeline touches the
         host clock; the pipeline itself stays pure/jittable."""
         t0 = time.perf_counter()
-        res = self.balance(weights, coords=coords, old_parts=old_parts)
+        res = self.balance(weights, coords=coords, old_parts=old_parts,
+                           keys=keys, warm_splitters=warm_splitters)
         jax.block_until_ready(res.parts)
         return res, {"t_balance": time.perf_counter() - t0}
 

@@ -82,13 +82,22 @@ def _keys_linear_sharded(spec: BalanceSpec, coords, weights, *, axis: str):
     return coords[:, 0]
 
 
+@register_stage("sharded", "keys", "cached")
+def _keys_cached_sharded(spec: BalanceSpec, coords, weights, *, axis: str,
+                         keys):
+    """Pass-through for precomputed keys (the incremental ``KeyCache``
+    path): the shard-local key tile arrives as a pipeline operand, so
+    the global pmin/pmax bounding-box reduction is skipped entirely."""
+    return keys
+
+
 # ---------------------------------------------------------------------------
 # partition1d
 # ---------------------------------------------------------------------------
 
 @register_stage("sharded", "partition1d", "sorted")
 def _partition_sorted_sharded(spec: BalanceSpec, keys, weights, coords, *,
-                              axis: str):
+                              axis: str, warm=None):
     """Replicated global curve order + Algorithm-1 scan partition.
 
     The all-gather sort costs nothing at simulation scale; multi-host
@@ -108,54 +117,67 @@ def _partition_sorted_sharded(spec: BalanceSpec, keys, weights, coords, *,
 
 
 def ksection_splitters_sharded(spec: BalanceSpec, kf, w, *, axis: str,
-                               hist_local):
+                               hist_local, warm=None):
     """Shared shard-local body of the distributed k-section search.
 
     Identical iteration math to ``core.partition1d.ksection``
-    (``ksection_splitters`` is literally the same function); the only
-    collective is ONE psum of the ``(p-1)*k`` candidate-cut weight
+    (``ksection_splitters_counted`` is literally the same function); the
+    only collective is ONE psum of the ``(p-1)*k`` candidate-cut weight
     histogram per round (the paper's streaming/low-memory property -- no
     global sort, no gathered key array), and the only variant-dependent
     piece is ``hist_local(cuts) -> below`` (jnp reference or the fused
     Pallas kernel).  Bit-exact across variants on integer-valued weights
-    because psum and tile accumulation only reorder exact additions."""
+    because psum and tile accumulation only reorder exact additions.
+
+    ``warm`` (replicated (p-1,) splitters from the previous step) seeds
+    the search boxes via ``warm_start_boxes`` -- one extra histogram
+    psum validates them -- and ``spec.ksection_tol`` lets the search
+    stop as soon as every box has converged.  Returns
+    ``(splitters, rounds)``."""
     p = spec.p
     fdt = jnp.float32
     total = jax.lax.psum(jnp.sum(w), axis)
     targets = total * jnp.arange(1, p, dtype=fdt) / p
 
-    blo = jnp.full((p - 1,), jax.lax.pmin(jnp.min(kf), axis), dtype=fdt)
-    bhi = jnp.full((p - 1,), jax.lax.pmax(jnp.max(kf), axis) + 1, dtype=fdt)
+    # local histogram contribution, reduced once across shards
+    hist = lambda cuts: jax.lax.psum(hist_local(cuts), axis)
+    lo = jax.lax.pmin(jnp.min(kf), axis)
+    hi = jax.lax.pmax(jnp.max(kf), axis) + 1
+    if warm is not None:
+        blo, bhi = _p1d.warm_start_boxes(warm, lo, hi, targets, hist,
+                                         k=spec.k)
+    else:
+        blo = jnp.full((p - 1,), lo, dtype=fdt)
+        bhi = jnp.full((p - 1,), hi, dtype=fdt)
 
-    return _p1d.ksection_splitters(
-        targets, blo, bhi,
-        # local histogram contribution, reduced once across shards
-        lambda cuts: jax.lax.psum(hist_local(cuts), axis),
-        k=spec.k, iters=spec.iters)
+    return _p1d.ksection_splitters_counted(
+        targets, blo, bhi, hist,
+        k=spec.k, iters=spec.iters, tol=spec.ksection_tol)
 
 
 def _ksection_parts(spec: BalanceSpec, keys, weights, *, axis: str,
-                    make_hist):
+                    make_hist, warm=None):
     fdt = jnp.float32
     kf = keys.astype(fdt)
     w = weights.astype(fdt)
-    splitters = ksection_splitters_sharded(spec, kf, w, axis=axis,
-                                           hist_local=make_hist(kf, w))
-    return jnp.searchsorted(splitters, kf, side="right").astype(jnp.int32)
+    splitters, rounds = ksection_splitters_sharded(
+        spec, kf, w, axis=axis, hist_local=make_hist(kf, w), warm=warm)
+    parts = jnp.searchsorted(splitters, kf, side="right").astype(jnp.int32)
+    return parts, {"splitters": splitters, "ksection_rounds": rounds}
 
 
 @register_stage("sharded", "partition1d", "ksection")
 def _partition_ksection_sharded(spec: BalanceSpec, keys, weights, coords, *,
-                                axis: str):
+                                axis: str, warm=None):
     """The paper's k-section histogram search, distributed (jnp hist)."""
     return _ksection_parts(
-        spec, keys, weights, axis=axis,
+        spec, keys, weights, axis=axis, warm=warm,
         make_hist=lambda kf, w: lambda cuts: _p1d.weight_below(kf, w, cuts))
 
 
 @register_stage("sharded", "partition1d", "ksection_pallas")
 def _partition_ksection_pallas_sharded(spec: BalanceSpec, keys, weights,
-                                       coords, *, axis: str):
+                                       coords, *, axis: str, warm=None):
     """k-section search with the fused Pallas histogram kernel.
 
     Same search as the 'ksection' variant; the per-round (p-1)*k
@@ -167,7 +189,7 @@ def _partition_ksection_pallas_sharded(spec: BalanceSpec, keys, weights,
     from ..kernels.ops import ksection_histogram_op
     interpret = jax.default_backend() != "tpu"
     return _ksection_parts(
-        spec, keys, weights, axis=axis,
+        spec, keys, weights, axis=axis, warm=warm,
         make_hist=lambda kf, w: lambda cuts: ksection_histogram_op(
             kf, w, cuts, use_pallas=True, interpret=interpret))
 
@@ -235,16 +257,20 @@ def _migrate_executor_sharded(spec: BalanceSpec, old_parts, new_parts,
 # pipeline composition
 # ---------------------------------------------------------------------------
 
-_FN_CACHE: Dict[Tuple[BalanceSpec, bool, Mesh], callable] = {}
+_FN_CACHE: Dict[Tuple, callable] = {}
 
 
-def build_balance_fn(spec: BalanceSpec, mesh: Mesh, has_old: bool):
+def build_balance_fn(spec: BalanceSpec, mesh: Mesh, has_old: bool,
+                     has_keys: bool = False, has_warm: bool = False):
     """Compose the registered sharded stages into one shard_map region.
 
-    Returns ``fn(weights, coords[, old_parts]) -> (parts, aux)`` over
-    global ``(p*C,)`` arrays; jit-compatible (and shape-polymorphic: C is
-    rediscovered per trace)."""
-    key = (spec, has_old, mesh)
+    Returns ``fn(weights, coords, *opts) -> (parts, aux)`` over global
+    ``(p*C,)`` arrays, where ``opts`` are -- in order, each present only
+    when its flag is set -- ``old_parts`` (sharded), precomputed ``keys``
+    (sharded, the incremental KeyCache path), and ``warm`` splitters
+    (replicated (p-1,), warm-starting the k-section boxes).
+    Jit-compatible (and shape-polymorphic: C is rediscovered per trace)."""
+    key = (spec, has_old, has_keys, has_warm, mesh)
     if key in _FN_CACHE:
         return _FN_CACHE[key]
     variants = resolve_variants(spec)
@@ -252,12 +278,20 @@ def build_balance_fn(spec: BalanceSpec, mesh: Mesh, has_old: bool):
                if variants["keys"] is not None else None)
     p1d_fn = get_stage("sharded", "partition1d", variants["partition1d"])
     p = spec.p
+    if has_keys and keys_fn is None:
+        raise ValueError(
+            f"method {spec.method!r} has no keys stage; precomputed keys "
+            "only apply to SFC/linear methods")
 
-    def body(w, xyz, old=None):
-        keys = keys_fn(spec, xyz, w, axis=AXIS) if keys_fn is not None \
-            else None
-        new = p1d_fn(spec, keys, w, xyz, axis=AXIS)
-        aux = {}
+    def body(w, xyz, old=None, keys_in=None, warm=None):
+        if keys_in is not None:
+            keys = get_stage("sharded", "keys", "cached")(
+                spec, xyz, w, axis=AXIS, keys=keys_in)
+        else:
+            keys = keys_fn(spec, xyz, w, axis=AXIS) if keys_fn is not None \
+                else None
+        out = p1d_fn(spec, keys, w, xyz, axis=AXIS, warm=warm)
+        new, aux = out if isinstance(out, tuple) else (out, {})
         if old is not None and spec.use_remap:
             new, perm = get_stage("sharded", "remap", "greedy")(
                 spec, old, new, w, axis=AXIS)
@@ -276,14 +310,22 @@ def build_balance_fn(spec: BalanceSpec, mesh: Mesh, has_old: bool):
                         spec, old, new, w, axis=AXIS)
         return new, aux
 
-    n_in = 3 if has_old else 2
-    if has_old:
-        def wrapped(w, xyz, old):
-            return body(w, xyz, old)
-    else:
-        def wrapped(w, xyz):
-            return body(w, xyz)
-    specs = dict(mesh=mesh, in_specs=(P(AXIS),) * n_in,
+    # optional operands in fixed order: old (sharded), keys (sharded),
+    # warm splitters (replicated)
+    in_specs = [P(AXIS), P(AXIS)]
+    slots = []
+    for flag, pspec in ((has_old, P(AXIS)), (has_keys, P(AXIS)),
+                        (has_warm, P())):
+        slots.append(flag)
+        if flag:
+            in_specs.append(pspec)
+
+    def wrapped(*args):
+        w, xyz, rest = args[0], args[1], list(args[2:])
+        opts = [rest.pop(0) if flag else None for flag in slots]
+        return body(w, xyz, *opts)
+
+    specs = dict(mesh=mesh, in_specs=tuple(in_specs),
                  out_specs=(P(AXIS), P()))
     # the greedy-remap fori_loop defeats the static replication checker
     # (its carry mixes replicated and sharded leaves), so opt out; the

@@ -53,6 +53,7 @@ deprecated thin wrappers that build a spec and delegate to the session.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -64,7 +65,8 @@ import numpy as np
 
 from ..core import Balancer, BalanceSpec, imbalance
 from ..core.metrics import cut_links
-from ..core.spec import Spec, register_spec_pytree
+from ..core.sfc import refresh_key_cache
+from ..core.spec import SFC_METHODS, Spec, register_spec_pytree
 from .assemble import build_elements, load_vector, mass_matvec
 from .estimate import doerfler_mark, threshold_coarsen_mark, zz_estimate
 from .mesh import Mesh
@@ -159,6 +161,15 @@ class AdaptSpec(Spec):
                        every new partition and the solve runs distributed
                        PCG whose matvec communicates via the neighbor
                        halo exchange instead of a global psum
+    incremental        make rebalance cost scale with the per-step delta:
+                       SFC keys are cached on the leaf payload and only
+                       dirty leaves re-key (frozen bounding box with a
+                       drift invalidation rule), the k-section search is
+                       warm-started from the previous step's splitters,
+                       and the owned-layout ``HaloPlan`` is rebuilt from
+                       the refinement/migration delta instead of from
+                       scratch.  Every path is exact vs the cold rebuild
+                       (same frozen box, converged boxes)
     max_steps          stationary: adaptive iterations
     max_tets           stop refining beyond this many elements
     dt, n_steps        time stepping (backward Euler); ``dt == 0`` means
@@ -176,6 +187,7 @@ class AdaptSpec(Spec):
     balance: BalanceSpec = BalanceSpec(p=16, method="hsfc")
     backend: str = "host"
     vertex_layout: str = "replicated"
+    incremental: bool = False
     max_steps: int = 10
     max_tets: int = 200_000
     dt: float = 0.0
@@ -334,6 +346,12 @@ class SessionState:
     balance_result: Any = None          # core.BalanceResult of last repart
     sharded: Any = None                 # latest ShardedElements (sharded)
     halo: Any = None                    # HaloPlan matching `sharded` (owned)
+    # connectivity/partition snapshots `halo` was built from, so the
+    # incremental session can rebuild the next plan from the delta
+    packed_tets: Optional[np.ndarray] = None
+    packed_parts: Optional[np.ndarray] = None
+    halo_info: Optional[Dict] = None    # how the last HaloPlan was produced
+    key_info: Optional[Dict] = None     # how the last SFC keys were produced
     # staleness tracking for the owned packing: the adapt_mesh stages bump
     # mesh_version on every mutation (counts alone can't tell a
     # coarsen+refine step that keeps n_tets/n_verts constant from a no-op)
@@ -417,14 +435,25 @@ def _pack_owned(session: "AdaptiveSession", state: SessionState):
     per-matvec communication model, and invalidate the cached operators.
     The single packing recipe -- both the balance stage and the solve-path
     staleness repack go through here."""
-    from .halo import build_halo_plan
+    from .halo import build_halo_plan, update_halo_plan
     from .parallel import shard_elements_on_device
     el = _ensure_elements(state)
     mesh = state.mesh
-    parts = mesh.leaf_payload["parts"]
+    parts = np.asarray(mesh.leaf_payload["parts"])
     p = session.balance_spec.p
-    plan = build_halo_plan(mesh.tets, parts, mesh.n_verts, p)
+    if (session.spec.incremental and state.halo is not None
+            and state.packed_tets is not None
+            and state.packed_parts is not None):
+        plan, hinfo = update_halo_plan(
+            state.halo, state.packed_tets, state.packed_parts,
+            mesh.tets, parts, mesh.n_verts, p)
+    else:
+        plan = build_halo_plan(mesh.tets, parts, mesh.n_verts, p)
+        hinfo = {"mode": "scratch"}
     state.halo = plan
+    state.halo_info = hinfo
+    state.packed_tets = mesh.tets.copy()
+    state.packed_parts = parts.copy()
     state.sharded = shard_elements_on_device(
         el, jnp.asarray(parts), p, session.device_mesh, halo=plan)
     state.packed_ntets = mesh.n_tets
@@ -572,6 +601,45 @@ def _transfer_stage_p1(session: "AdaptiveSession", state: SessionState):
                           state.mesh)
 
 
+def _incremental_keys(session: "AdaptiveSession",
+                      state: SessionState) -> np.ndarray:
+    """SFC keys for the current mesh with per-step-delta cost.
+
+    Keys live on the leaf payload (``sfc_key``) so refine/coarsen
+    propagate them alongside the elements; a copy of each leaf's
+    connectivity row at key time (``sfc_tet``) is the dirty signature --
+    children and coarsened parents inherit the row of a *different*
+    element, so a row mismatch is exactly "this leaf moved".  Only dirty
+    leaves re-key, against the session's frozen bounding box, until the
+    live box drifts past the cache's tolerance (then everything re-keys
+    against a fresh frozen box).  Identical to a full re-key against the
+    same frozen box."""
+    mesh = state.mesh
+    bspec = session.balance_spec
+    coords = np.asarray(mesh.barycenters())
+    pay = mesh.leaf_payload
+    n = mesh.n_tets
+    cache = session._key_cache
+    dirty = None
+    keys = pay.get("sfc_key")
+    sig = pay.get("sfc_tet")
+    if (cache is not None and keys is not None and len(keys) == n
+            and sig is not None and len(sig) == n):
+        cache = dataclasses.replace(cache, keys=np.asarray(keys))
+        dirty = (np.asarray(sig) != mesh.tets).any(axis=1)
+    else:
+        cache = None
+    cache, info = refresh_key_cache(
+        cache, coords, dirty,
+        curve="morton" if bspec.method == "msfc" else "hilbert",
+        uniform=bspec.method != "hsfc_zoltan", bits=bspec.sfc_bits)
+    session._key_cache = cache
+    pay["sfc_key"] = cache.keys
+    pay["sfc_tet"] = mesh.tets.copy()
+    state.key_info = info
+    return cache.keys
+
+
 def _balance_common(session: "AdaptiveSession", state: SessionState):
     """Trigger policy + one DLB step; parts persist in ``leaf_payload``
     so refine/coarsen propagate them to the next step (children inherit).
@@ -602,8 +670,12 @@ def _balance_common(session: "AdaptiveSession", state: SessionState):
     state.balanced_step = state.step
     if repart:
         old = None if inherited is None else jnp.asarray(inherited)
+        keys = None
+        if spec.incremental and session.balance_spec.method in SFC_METHODS:
+            keys = jnp.asarray(_incremental_keys(session, state))
         br = session.balancer.balance(
-            w, coords=jnp.asarray(mesh.barycenters()), old_parts=old)
+            w, coords=jnp.asarray(mesh.barycenters()), old_parts=old,
+            keys=keys)
         parts = br.parts
         state.balance_result = br
         state.step_imbalance = float(br.imbalance)
@@ -692,7 +764,10 @@ class AdaptiveSession:
         bspec = spec.balance
         if bspec.backend != spec.backend:
             bspec = bspec.replace(backend=spec.backend)
+        if spec.incremental and not bspec.warm_start:
+            bspec = bspec.replace(warm_start=True)
         self.balance_spec = bspec
+        self._key_cache = None          # incremental SFC KeyCache
         # fails fast: sharded backend checks device count / stage variants
         self.balancer = Balancer.from_spec(bspec, devices=devices)
         self.variants = resolve_adapt_variants(spec, self.setup)

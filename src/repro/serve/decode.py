@@ -456,3 +456,43 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
         return EncDecState(c, cross, cross,
                            jnp.full((batch,), max_seq - 1, jnp.int32))
     raise ValueError(cfg.family)
+
+
+def _reset_kv_slot(c: KVCache, f: KVCache, i: int) -> KVCache:
+    return KVCache(k=c.k.at[:, i].set(f.k[:, i]),
+                   v=c.v.at[:, i].set(f.v[:, i]),
+                   stored_pos=c.stored_pos.at[i].set(f.stored_pos[i]),
+                   pos=c.pos.at[i].set(f.pos[i]))
+
+
+def reset_slot(state, fresh, i: int, cfg: ModelConfig):
+    """Return ``state`` with batch row ``i`` reset to ``fresh``'s row.
+
+    A freed decode slot still holds the finished request's KV rows /
+    recurrent state / position; admitting a new request without clearing
+    them leaks the old context into the new request's attention.
+    ``fresh`` is a reference state from ``init_decode_state`` (or a saved
+    copy of the pristine batch) with the same shapes."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _reset_kv_slot(state, fresh, i)
+    if cfg.family == "ssm":
+        layers = SSMCache(
+            state=state.layers.state.at[:, i].set(fresh.layers.state[:, i]),
+            conv=state.layers.conv.at[:, i].set(fresh.layers.conv[:, i]))
+        return SSMState(layers, state.pos.at[i].set(fresh.pos[i]))
+    if cfg.family == "hybrid":
+        caches = []
+        for c, f in zip(state.layers, fresh.layers):
+            if isinstance(c, KVCache):
+                caches.append(_reset_kv_slot(c, f, i))
+            else:
+                caches.append(RGLRUCache(h=c.h.at[i].set(f.h[i]),
+                                         conv=c.conv.at[i].set(f.conv[i])))
+        return HybridState(tuple(caches), state.pos.at[i].set(fresh.pos[i]))
+    if cfg.family == "encdec":
+        return EncDecState(
+            _reset_kv_slot(state.self_kv, fresh.self_kv, i),
+            state.cross_k.at[:, i].set(fresh.cross_k[:, i]),
+            state.cross_v.at[:, i].set(fresh.cross_v[:, i]),
+            state.pos.at[i].set(fresh.pos[i]))
+    raise ValueError(cfg.family)

@@ -27,7 +27,7 @@ import numpy as np
 
 from ..core import Balancer, BalanceSpec
 from ..models import ModelConfig
-from .decode import decode_step, init_decode_state, prefill
+from .decode import decode_step, init_decode_state, prefill, reset_slot
 
 
 @dataclasses.dataclass
@@ -58,13 +58,19 @@ class ServeEngine:
         self.n_groups = n_groups
         self.rebalance_every = rebalance_every
         self.state = init_decode_state(cfg, slots, max_seq)
+        # pristine reference state: freed slots are reset from its rows on
+        # admit, so a reused slot can't attend to the previous occupant's KV
+        self._fresh = self.state
         self.tokens = jnp.zeros((slots, 1), jnp.int32)
         self.active: List[Optional[Request]] = [None] * slots
         self.queue: List[Request] = []
         self.step_count = 0
         if balance_spec is None:
+            # warm-started k-section: each rebalance seeds its splitter
+            # search from the previous one's converged splitters
             balance_spec = BalanceSpec(p=n_groups, method="linear",
-                                       oneD="sorted", backend=backend)
+                                       oneD="ksection", warm_start=True,
+                                       backend=backend)
         self.balancer = Balancer.from_spec(balance_spec)
         self.migration_log: List[Dict] = []
         self._decode = jax.jit(
@@ -80,6 +86,10 @@ class ServeEngine:
                 # prefill one request (batch-1) and merge its cache into
                 # slot i; for the simulation we seed with the prompt's
                 # last token and an empty cache (cheap-prefill mode).
+                # The slot may have hosted a finished request: clear its
+                # KV rows and position first, or the new request decodes
+                # against the old occupant's context.
+                self.state = reset_slot(self.state, self._fresh, i, self.cfg)
                 self.active[i] = req
                 self.tokens = self.tokens.at[i, 0].set(int(req.prompt[-1]))
 

@@ -291,7 +291,7 @@ def test_ksection_splitters_bit_exact_host_jnp_pallas():
             kf = kl.astype(jnp.float32)
             wf = wl.astype(jnp.float32)
             return dstages.ksection_splitters_sharded(
-                spec, kf, wf, axis="x", hist_local=make_hist(kf, wf))
+                spec, kf, wf, axis="x", hist_local=make_hist(kf, wf))[0]
         try:
             fn = shard_map(body, mesh=mesh, in_specs=(P("x"), P("x")),
                            out_specs=P(), check_rep=False)

@@ -1,0 +1,340 @@
+"""Incremental-rebalance parity: every delta path bit-exact vs cold.
+
+The incremental machinery (warm-started k-section boxes, cached SFC
+keys, delta halo rebuild) is only admissible because each path is
+*provably* identical to its from-scratch twin -- these property tests
+enforce that across churn fractions, empty parts, repeated keys, and
+refinement deltas, on every backend variant.  Also pins the
+``benchmarks.run`` harness exit-code contract (unknown ``--only`` and
+failing suites must not exit 0).
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, strategies as st
+from repro.core import Balancer, BalanceSpec
+from repro.core.sfc import refresh_key_cache
+from repro.fem import refine, unit_cube_mesh
+from repro.fem.halo import build_halo_plan, update_halo_plan
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+needs8 = pytest.mark.skipif(jax.device_count() < 8,
+                            reason="needs 8 placeholder devices")
+
+
+# ---------------------------------------------------------------------------
+# Warm-started k-section == cold k-section (part assignments)
+# ---------------------------------------------------------------------------
+
+def _churned_problem(seed):
+    """Coords/weights plus a churned twin: quantized coords (repeated
+    keys are the common case on coarse meshes, and enough duplication
+    forces empty parts), integer weights (exact histogram sums), and a
+    churn fraction drawn from [0, 0.6]."""
+    rng = np.random.default_rng(seed)
+    n = 512
+    grid = int(rng.integers(4, 64))
+    coords = (rng.integers(0, grid + 1, (n, 3)) / grid).astype(np.float32)
+    coords[0], coords[1] = 0.0, 1.0
+    w = rng.integers(1, 10, n).astype(np.float32)
+    frac = float(rng.random()) * 0.6
+    m = int(round(frac * (n - 2)))
+    c2 = coords.copy()
+    if m:
+        idx = rng.choice(np.arange(2, n), size=m, replace=False)
+        c2[idx] = (rng.integers(0, grid + 1, (m, 3)) / grid
+                   ).astype(np.float32)
+    return coords, c2, w
+
+
+def _warm_parity(backend, seed, p, use_pallas=None):
+    coords, c2, w = _churned_problem(seed)
+    kw = {} if use_pallas is None else {"use_pallas": use_pallas}
+    cold = Balancer.from_spec(BalanceSpec(
+        p=p, method="hsfc", oneD="ksection", backend=backend, **kw))
+    warm = Balancer.from_spec(BalanceSpec(
+        p=p, method="hsfc", oneD="ksection", backend=backend,
+        warm_start=True, **kw))
+    w = jnp.asarray(w)
+    base = cold.balance(w, coords=jnp.asarray(coords))
+    rc = cold.balance(w, coords=jnp.asarray(c2))
+    rw = warm.balance(w, coords=jnp.asarray(c2),
+                      warm_splitters=base.splitters)
+    np.testing.assert_array_equal(np.asarray(rw.parts),
+                                  np.asarray(rc.parts))
+    # warm-started boxes can never need MORE histogram rounds
+    assert int(rw.ksection_rounds) <= int(rc.ksection_rounds)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 24))
+@settings(max_examples=10, deadline=None)
+def test_warm_ksection_host_parity(seed, p):
+    _warm_parity("host", seed, p)
+
+
+@needs8
+@pytest.mark.parametrize("seed", [0, 1])
+def test_warm_ksection_sharded_parity(seed):
+    _warm_parity("sharded", seed, 8, use_pallas=False)
+
+
+@needs8
+@pytest.mark.parametrize("seed", [2, 3])
+def test_warm_ksection_sharded_pallas_parity(seed):
+    _warm_parity("sharded", seed, 8, use_pallas=True)
+
+
+def test_warm_ksection_degenerate_splitters():
+    """All-equal previous splitters (every part empty but one) must not
+    poison the warm start -- invalid boxes fall back to the full range."""
+    rng = np.random.default_rng(7)
+    coords = rng.random((256, 3)).astype(np.float32)
+    w = jnp.asarray(rng.integers(1, 5, 256).astype(np.float32))
+    p = 8
+    cold = Balancer.from_spec(BalanceSpec(p=p, method="hsfc",
+                                          oneD="ksection"))
+    warm = Balancer.from_spec(BalanceSpec(p=p, method="hsfc",
+                                          oneD="ksection", warm_start=True))
+    rc = cold.balance(w, coords=jnp.asarray(coords))
+    degenerate = jnp.zeros(p - 1, jnp.float32)
+    rw = warm.balance(w, coords=jnp.asarray(coords),
+                      warm_splitters=degenerate)
+    np.testing.assert_array_equal(np.asarray(rw.parts),
+                                  np.asarray(rc.parts))
+
+
+# ---------------------------------------------------------------------------
+# Cached SFC keys: delta re-key == full re-key, drift invalidation
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=10, deadline=None)
+def test_refresh_key_cache_delta_matches_full(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(100, 2000))
+    coords = rng.random((n, 3)).astype(np.float32)
+    coords[0], coords[1] = 0.0, 1.0   # pin the box corners
+    cache, info = refresh_key_cache(None, coords)
+    assert info["mode"] == "full"
+    m = int(rng.integers(1, n - 2))
+    dirty = np.zeros(n, bool)
+    dirty[rng.choice(np.arange(2, n), size=m, replace=False)] = True
+    c2 = coords.copy()
+    c2[dirty] = rng.random((m, 3)).astype(np.float32)
+    delta, dinfo = refresh_key_cache(cache, c2, dirty)
+    full, _ = refresh_key_cache(None, c2)
+    assert dinfo["mode"] == "delta"
+    np.testing.assert_array_equal(delta.keys, full.keys)
+    # clean items were not re-keyed, so the cache stayed consistent
+    np.testing.assert_array_equal(delta.keys[~dirty], cache.keys[~dirty])
+
+
+def test_refresh_key_cache_drift_invalidates():
+    rng = np.random.default_rng(11)
+    coords = rng.random((500, 3)).astype(np.float32)
+    cache, _ = refresh_key_cache(None, coords)
+    # box grows 20% -- past the 5% default drift tolerance
+    grown = coords * 1.2
+    _, info = refresh_key_cache(cache, grown,
+                                np.zeros(500, bool))
+    assert info["mode"] == "full"
+
+
+def test_refresh_key_cache_param_change_invalidates():
+    rng = np.random.default_rng(12)
+    coords = rng.random((300, 3)).astype(np.float32)
+    cache, _ = refresh_key_cache(None, coords, curve="hilbert")
+    _, info = refresh_key_cache(cache, coords, np.zeros(300, bool),
+                                curve="morton")
+    assert info["mode"] == "full"
+
+
+# ---------------------------------------------------------------------------
+# Delta halo rebuild == from-scratch build
+# ---------------------------------------------------------------------------
+
+def _assert_plans_equal(a, b):
+    import dataclasses
+    for fld in dataclasses.fields(a):
+        x, y = getattr(a, fld.name), getattr(b, fld.name)
+        if isinstance(x, (int, tuple)):
+            assert x == y, fld.name
+        else:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=fld.name)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 16))
+@settings(max_examples=10, deadline=None)
+def test_update_halo_plan_part_churn(seed, p):
+    """Migration-only delta (tets fixed, parts churned) -- exercises the
+    positional matching fast path."""
+    rng = np.random.default_rng(seed)
+    mesh = unit_cube_mesh(2)
+    refine(mesh, rng.random(mesh.n_tets) < 0.3)
+    n = mesh.n_tets
+    tets = mesh.tets
+    parts = rng.integers(0, p, n).astype(np.int32)
+    plan = build_halo_plan(tets, parts, mesh.n_verts, p)
+    frac = float(rng.random())
+    parts2 = parts.copy()
+    moved = rng.random(n) < frac
+    parts2[moved] = rng.integers(0, p, int(moved.sum()))
+    got, info = update_halo_plan(plan, tets, parts, tets, parts2,
+                                 mesh.n_verts, p)
+    want = build_halo_plan(tets, parts2, mesh.n_verts, p)
+    _assert_plans_equal(got, want)
+    if not moved.any():
+        assert info["mode"] == "noop"
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 8))
+@settings(max_examples=8, deadline=None)
+def test_update_halo_plan_refinement_delta(seed, p):
+    """Refinement delta (element rows rewritten, vertex count grows) --
+    exercises the sort-based matching and the resize copy path."""
+    rng = np.random.default_rng(seed)
+    mesh = unit_cube_mesh(2)
+    refine(mesh, rng.random(mesh.n_tets) < 0.2)
+    parts = rng.integers(0, p, mesh.n_tets).astype(np.int32)
+    mesh.leaf_payload["parts"] = parts
+    old_tets = mesh.tets.copy()
+    old_parts = parts.copy()
+    plan = build_halo_plan(old_tets, old_parts, mesh.n_verts, p)
+    refine(mesh, rng.random(mesh.n_tets) < 0.15)
+    new_parts = np.asarray(mesh.leaf_payload["parts"], np.int32)
+    got, info = update_halo_plan(plan, old_tets, old_parts, mesh.tets,
+                                 new_parts, mesh.n_verts, p)
+    want = build_halo_plan(mesh.tets, new_parts, mesh.n_verts, p)
+    _assert_plans_equal(got, want)
+    assert info["mode"] in ("delta", "full", "noop")
+
+
+def test_update_halo_plan_falls_back_on_mismatched_plan():
+    rng = np.random.default_rng(5)
+    mesh = unit_cube_mesh(2)
+    parts = rng.integers(0, 4, mesh.n_tets).astype(np.int32)
+    plan = build_halo_plan(mesh.tets, parts, mesh.n_verts, 4)
+    got, info = update_halo_plan(None, mesh.tets, parts, mesh.tets, parts,
+                                 mesh.n_verts, 4)
+    assert info["mode"] == "full"
+    _assert_plans_equal(got, plan)
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run exit-code contract
+# ---------------------------------------------------------------------------
+
+def test_bench_run_unknown_only_errors(monkeypatch, capsys):
+    import benchmarks.run as brun
+    monkeypatch.setattr(sys, "argv", ["run.py", "--only", "nosuch"])
+    with pytest.raises(SystemExit) as ei:
+        brun.main()
+    assert ei.value.code not in (0, None)
+    capsys.readouterr()
+
+
+def test_bench_run_suite_error_exits_nonzero(monkeypatch, capsys):
+    import benchmarks.bench_aspect_ratio as bar
+    import benchmarks.run as brun
+
+    def boom(*a, **k):
+        raise RuntimeError("boom")
+
+    monkeypatch.setattr(bar, "run", boom)
+    monkeypatch.setattr(sys, "argv",
+                        ["run.py", "--only", "aspect_ratio", "--quick"])
+    with pytest.raises(SystemExit) as ei:
+        brun.main()
+    assert ei.value.code == 1
+    out = capsys.readouterr().out
+    assert "aspect_ratio/ERROR" in out
+
+
+# ---------------------------------------------------------------------------
+# AdaptSpec(incremental=True) end-to-end
+# ---------------------------------------------------------------------------
+
+def test_incremental_session_engages_delta_paths():
+    """An incremental host session must run end-to-end with the cached
+    key path engaged (first step keys from scratch, later steps delta
+    re-keys of the refinement-dirty blocks)."""
+    from repro.fem import AdaptSpec, AdaptiveSession, cylinder_mesh
+
+    infos = []
+    spec = AdaptSpec(problem="helmholtz", max_steps=3, max_tets=4000,
+                     tol=1e-6, incremental=True, trigger="always",
+                     balance=BalanceSpec(p=8, method="hsfc",
+                                         oneD="ksection"))
+    sess = AdaptiveSession(
+        spec, on_step=lambda st, state: infos.append(state.key_info))
+    res = sess.run(cylinder_mesh(4, 2, length=2.0, radius=0.5))
+    assert len(res.stats) == 3
+    # incremental forces warm-started k-section in the resolved spec
+    assert sess.balance_spec.warm_start
+    modes = [i["mode"] for i in infos if i is not None]
+    assert modes and modes[0] == "full"
+    assert any(m == "delta" for m in modes[1:])
+
+
+@needs8
+def test_incremental_session_sharded_matches_plain_mesh_trajectory():
+    """Sharded incremental session: runs end-to-end, records a halo
+    rebuild mode every packed step, and adapts the same mesh sizes as
+    its non-incremental twin (marking consumes the same solutions)."""
+    from repro.fem import AdaptSpec, AdaptiveSession, cylinder_mesh
+
+    def mk(inc):
+        halo_modes = []
+        spec = AdaptSpec(problem="helmholtz", max_steps=3, max_tets=4000,
+                         tol=1e-6, backend="sharded", incremental=inc,
+                         vertex_layout="owned", trigger="always",
+                         balance=BalanceSpec(p=8, method="hsfc",
+                                             oneD="ksection",
+                                             backend="sharded"))
+        sess = AdaptiveSession(
+            spec, on_step=lambda st, state: halo_modes.append(
+                None if state.halo_info is None
+                else state.halo_info["mode"]))
+        return sess.run(cylinder_mesh(4, 2, length=2.0, radius=0.5)), \
+            halo_modes
+
+    res_i, modes = mk(True)
+    res_p, _ = mk(False)
+    assert [s.n_tets for s in res_i.stats] == [s.n_tets for s in res_p.stats]
+    # on_step sees the LAST pack of each step (a step may pack more than
+    # once), so just pin the mode vocabulary and that the incremental
+    # matcher engaged at least once (delta rebuild or detected noop)
+    got = [m for m in modes if m is not None]
+    assert got
+    assert all(m in ("scratch", "delta", "noop", "full") for m in got)
+    assert any(m in ("delta", "noop") for m in got)
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 16))
+@settings(max_examples=10, deadline=None)
+def test_sorted_exact_splitters_monotone_with_empty_parts(seed, p):
+    """Fewer distinct keys than parts forces empty parts; the diagnostic
+    splitters must stay monotone (duplicated, not out-of-order) and be
+    safe to feed back as warm-start seeds."""
+    from repro.core import partition1d as p1d
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(p, 100))
+    keys = rng.integers(0, max(2, p // 2), n).astype(np.float32)
+    w = jnp.asarray(rng.integers(1, 5, n).astype(np.float32))
+    r = p1d.sorted_exact(jnp.asarray(keys), w, p)
+    s = np.asarray(r.splitters)
+    assert s.shape == (p - 1,)
+    assert (np.diff(s) >= 0).all()
+    cold = p1d.ksection(jnp.asarray(keys), w, p)
+    warm = p1d.ksection(jnp.asarray(keys), w, p, warm=r.splitters)
+    np.testing.assert_array_equal(np.asarray(warm.parts),
+                                  np.asarray(cold.parts))

@@ -89,3 +89,33 @@ def test_engine_continuous_batching_with_dlb():
     assert len(eng.migration_log) >= 1
     # rebalancing keeps simulated groups balanced
     assert eng.migration_log[-1]["imbalance"] < 2.0
+
+
+def test_engine_slot_reuse_matches_fresh_engine():
+    """A request admitted into a freed slot must decode as if the slot
+    were new -- the previous occupant's KV rows and positions are reset
+    on admit, so the reused-slot output matches a fresh engine's."""
+    cfg = get_smoke("llama3_8b")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    prompt_a = RNG.integers(1, cfg.vocab, 8)
+    prompt_b = RNG.integers(1, cfg.vocab, 8)
+
+    eng = ServeEngine(params, cfg, slots=1, max_seq=64, n_groups=2,
+                      rebalance_every=1000)
+    a = Request(rid=0, prompt=prompt_a, max_new=6)
+    eng.submit(a)
+    eng.run(max_steps=16)
+    assert a.done
+    # slot 0 is now free; B is admitted into it
+    b = Request(rid=1, prompt=prompt_b, max_new=6)
+    eng.submit(b)
+    eng.run(max_steps=16)
+    assert b.done
+
+    fresh = ServeEngine(params, cfg, slots=1, max_seq=64, n_groups=2,
+                        rebalance_every=1000)
+    b2 = Request(rid=2, prompt=prompt_b, max_new=6)
+    fresh.submit(b2)
+    fresh.run(max_steps=16)
+    assert b2.done
+    assert b.out == b2.out, (b.out, b2.out)
