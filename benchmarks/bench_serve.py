@@ -1,0 +1,110 @@
+"""Serving-engine sweep: latency/throughput vs KV rebalance cadence.
+
+The serving claim mirrors the paper's: periodic repartition + minimal
+migration keeps per-group load (here: live KV bytes) balanced at a cost
+that is small next to the work it saves.  This sweep drives the sharded
+slot engine (``prefill='full'``, ``decode='sharded'``,
+``rebalance='kv'``) with one seeded bursty trace per ``rebalance_every``
+cadence -- plus a ``rebalance='never'`` control -- and reports
+throughput, p50/p99 TTFT and ITL, and the per-rebalance
+``moved_kv_bytes`` next to TotalV/imbalance.
+
+Needs >= groups JAX devices (CI forces 8 simulated host devices via
+XLA_FLAGS); groups is clamped to the devices available.
+
+Standalone:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m benchmarks.bench_serve --quick --json BENCH_serve.json
+"""
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_smoke
+from repro.core import BalanceSpec
+from repro.models import init_model
+from repro.serve import ServeSession, ServeSpec, bursty_trace, run_trace
+
+REBALANCE_SWEEP = (4, 8, 16, 32)
+QUICK_SWEEP = (4, 16)
+
+
+def _session(params, cfg, groups, slots, max_seq, rebalance_every, mode):
+    spec = ServeSpec(
+        slots=slots, groups=groups, max_seq=max_seq,
+        rebalance_every=rebalance_every, prefill="full", decode="sharded",
+        rebalance=mode,
+        balance=BalanceSpec(p=groups, method="linear", oneD="ksection",
+                            warm_start=True))
+    return ServeSession(params, cfg, spec)
+
+
+def run(quick=False, sweep=None):
+    if sweep is None:
+        sweep = QUICK_SWEEP if quick else REBALANCE_SWEEP
+    cfg = get_smoke("llama3_8b").replace(n_layers=2, d_model=128, n_heads=4,
+                                         n_kv_heads=2, head_dim=32, d_ff=256)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    groups = min(4, len(jax.devices()))
+    slots = 2 * groups
+    max_seq = 64 if quick else 128
+    n_req = 16 if quick else 48
+    trace = bursty_trace(n_req, seed=0, vocab=cfg.vocab,
+                         prompt_buckets=(4, 8, 16),
+                         max_new_cap=16 if quick else 48)
+    rows, recs = [], []
+    cells = [(re, "kv") for re in sweep] + [(10**6, "never")]
+    for re, mode in cells:
+        sess = _session(params, cfg, groups, slots, max_seq, re, mode)
+        m = run_trace(sess, trace, max_steps=4096)
+        tag = f"serve/re{re}" if mode == "kv" else "serve/never"
+        rows.append((f"{tag}/throughput_tok_s", m["throughput_tok_s"],
+                     m["tokens"]))
+        rows.append((f"{tag}/ttft_p50_ms", m["ttft_p50_s"] * 1e3,
+                     m["ttft_p99_s"] * 1e3))
+        rows.append((f"{tag}/itl_p50_ms", m["itl_p50_s"] * 1e3,
+                     m["itl_p99_s"] * 1e3))
+        rows.append((f"{tag}/moved_kv_bytes", m["moved_kv_bytes_total"],
+                     m["rebalances"]))
+        assert m["completed"] == m["requests"], (mode, re, m)
+        recs.append({
+            "rebalance_every": re, "mode": mode,
+            "throughput_tok_s": m["throughput_tok_s"],
+            "ttft_p50_s": m["ttft_p50_s"], "ttft_p99_s": m["ttft_p99_s"],
+            "itl_p50_s": m["itl_p50_s"], "itl_p99_s": m["itl_p99_s"],
+            "steps": m["steps"], "tokens": m["tokens"],
+            "rebalances": m["rebalances"],
+            "moved_kv_bytes_total": m["moved_kv_bytes_total"],
+            "migrated_requests": m["migrated_requests"],
+            "per_rebalance": [
+                {k: e[k] for k in ("step", "TotalV", "imbalance", "retained",
+                                   "moved_kv_bytes", "n_moved", "deferred")}
+                for e in m["migration_log"]],
+        })
+    record = {"bench": "serve", "backend": jax.default_backend(),
+              "groups": groups, "slots": slots, "max_seq": max_seq,
+              "n_requests": n_req, "family": cfg.family, "sweep": recs}
+    return rows, record
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a BENCH_serve.json record to PATH")
+    args = ap.parse_args()
+    rows, record = run(quick=args.quick)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,9 @@ Each module maps to one paper table/figure (DESIGN.md section 8):
     bench_churn           incremental rebalance: warm k-section rounds,
                           delta re-key, delta halo rebuild vs churn
                           fraction (``--only churn``)
+    bench_serve           serving: throughput + p50/p99 TTFT/ITL vs KV
+                          rebalance cadence, per-rebalance moved_kv_bytes
+                          (needs >= 4 simulated devices; ``--only serve``)
 
 ``--json DIR`` aggregates each suite's machine-readable record into
 ``DIR/BENCH_<suite>.json`` (suites without a record are skipped) so the
@@ -35,7 +38,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_adaptive_solve, bench_aspect_ratio, bench_beyond,
-                   bench_churn, bench_dlb, bench_parabolic, bench_partition)
+                   bench_churn, bench_dlb, bench_parabolic, bench_partition,
+                   bench_serve)
 
     # every suite yields (rows, json_record_or_None)
     suites = {
@@ -48,6 +52,7 @@ def main() -> None:
         "aspect_ratio": lambda: (bench_aspect_ratio.run(), None),
         "beyond": lambda: (bench_beyond.run(), None),
         "churn": lambda: bench_churn.run(quick=args.quick),
+        "serve": lambda: bench_serve.run(quick=args.quick),
     }
     if args.only and args.only not in suites:
         ap.error(f"unknown suite {args.only!r} "

@@ -1,48 +1,55 @@
-"""End-to-end serving driver: continuous batching with DLB rebalancing.
+"""End-to-end serving driver: sharded slots, KV migration, bursty trace.
 
 Decodes real tokens from a (small, randomly initialized) llama-family
-model with requests arriving continuously; every N steps the engine
-re-partitions live requests across simulated device groups using the
-paper's machinery, declared as a ``BalanceSpec`` (requests linearized by
-arrival id -> weighted 1-D partition -> Oliker--Biswas remap) and
-reports migration volume.
+model under a seeded bursty arrival trace.  The engine is declared as a
+``ServeSpec``: KV slots sharded over 4 device groups, real prefill, and
+every N steps a repartition of live requests using the paper's machinery
+(requests linearized by arrival id -> weighted 1-D k-section ->
+Oliker--Biswas remap) followed by PHYSICAL KV-slot migration between
+groups through the all_to_all executor -- per-rebalance moved bytes are
+reported next to TotalV/imbalance.
 
-    PYTHONPATH=src python examples/serve_continuous.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_continuous.py
 """
-import numpy as np
-
 import jax
+
 from repro.configs import get_smoke
 from repro.core import BalanceSpec
 from repro.models import init_model
-from repro.serve import Request, ServeEngine
+from repro.serve import ServeSession, ServeSpec, bursty_trace, run_trace
 
 
 def main():
-    rng = np.random.default_rng(0)
     cfg = get_smoke("llama3_8b").replace(n_layers=4, d_model=256, n_heads=8,
                                          n_kv_heads=4, head_dim=32, d_ff=512)
     params = init_model(cfg, jax.random.PRNGKey(0))
-    spec = BalanceSpec(p=4, method="linear", oneD="sorted")
-    eng = ServeEngine(params, cfg, slots=8, max_seq=128, n_groups=4,
-                      rebalance_every=8, balance_spec=spec)
+    groups = min(4, len(jax.devices()))
+    spec = ServeSpec(
+        slots=8, groups=groups, max_seq=128, rebalance_every=8,
+        prefill="full", decode="sharded", rebalance="kv",
+        balance=BalanceSpec(p=groups, method="linear", oneD="ksection",
+                            warm_start=True))
+    sess = ServeSession(params, cfg, spec)
 
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(1, cfg.vocab, rng.integers(4, 24)),
-                    max_new=int(rng.integers(8, 48)))
-            for i in range(24)]
-    for r in reqs:
-        eng.submit(r)
-    eng.run(max_steps=600)
+    trace = bursty_trace(24, seed=0, vocab=cfg.vocab,
+                         prompt_buckets=(4, 8, 16, 24), max_new_cap=48)
+    m = run_trace(sess, trace, max_steps=600)
 
-    done = sum(r.done for r in reqs)
-    toks = sum(len(r.out) for r in reqs)
-    print(f"completed {done}/{len(reqs)} requests, {toks} tokens generated, "
-          f"{eng.step_count} engine steps")
+    print(f"completed {m['completed']}/{m['requests']} requests, "
+          f"{m['tokens']} tokens in {m['steps']} engine steps "
+          f"({m['throughput_tok_s']:.1f} tok/s)")
+    print(f"TTFT p50/p99: {m['ttft_p50_s'] * 1e3:.1f}/"
+          f"{m['ttft_p99_s'] * 1e3:.1f} ms   "
+          f"ITL p50/p99: {m['itl_p50_s'] * 1e3:.1f}/"
+          f"{m['itl_p99_s'] * 1e3:.1f} ms")
+    print(f"KV migrated: {m['moved_kv_bytes_total']} bytes across "
+          f"{m['migrated_requests']} request moves")
     print("rebalance log (paper technique live):")
-    for entry in eng.migration_log:
-        print(f"  step {entry['step']:4d}: imbalance={entry['imbalance']:.3f} "
-              f"migrated_kv_weight={entry['TotalV']:.0f}")
+    for e in m["migration_log"]:
+        print(f"  step {e['step']:4d}: imbalance={e['imbalance']:.3f} "
+              f"TotalV={e['TotalV']:.0f} retained={e['retained']:.0f} "
+              f"moved_kv_bytes={e['moved_kv_bytes']}")
 
 
 if __name__ == "__main__":

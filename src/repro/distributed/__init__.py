@@ -4,7 +4,8 @@ the legacy on-device DLB wrapper (``DistributedBalancer``) and the
 migration executor."""
 from . import stages  # registers the sharded stage variants on import
 from .balancer import DistributedBalancer
-from .migrate import MigrationResult, dispatch_slots, migrate_items
+from .migrate import (MigrationResult, dispatch_slots, migrate_items,
+                      payload_nbytes)
 from .sharding import (Boxed, DEFAULT_RULES, axes_tree, box, logical,
                        pspec_tree, set_rules, shard_map, spec_for,
                        stack_axes, unbox, use_rules)

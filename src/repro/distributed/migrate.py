@@ -28,6 +28,7 @@ from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class MigrationResult(NamedTuple):
@@ -39,6 +40,20 @@ class MigrationResult(NamedTuple):
     w_sent: jax.Array     # () f32 weight shipped to other shards
     w_received: jax.Array # () f32 weight arriving from other shards
     w_kept: jax.Array     # () f32 weight that stayed local
+
+
+def payload_nbytes(payload: Any) -> int:
+    """Wire bytes of ONE item of a ``(C, ...)``-leaf payload pytree.
+
+    Sums ``prod(shape[1:]) * itemsize`` over the leaves -- the per-item
+    migration cost the volume metrics are denominated in.  Works on
+    arrays or ``jax.ShapeDtypeStruct`` leaves (shape-only accounting for
+    payloads that are not materialized host-side, e.g. KV-cache slots).
+    """
+    def nb(leaf):
+        return (int(np.prod(leaf.shape[1:], dtype=np.int64))
+                * jnp.dtype(leaf.dtype).itemsize)
+    return sum(nb(leaf) for leaf in jax.tree.leaves(payload))
 
 
 def dispatch_slots(dest: jax.Array, valid: jax.Array,

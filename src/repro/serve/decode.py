@@ -7,7 +7,7 @@ Cache layouts (logical sharding in brackets):
   holds.  S = full context for decode_32k; S = window (ring buffer) for
   SWA long_500k -- the position-tracked mask makes both layouts share the
   attention code.  The contraction over head_dim is sharded over "model"
-  for the memory-bound decode matvecs (DESIGN.md section 6).
+  for the memory-bound decode matvecs (see ROADMAP.md).
 * ssm:     stacked SSMCache (L, ...) -- O(1) state, the paper's cheapest
   migration unit for elastic serving.
 * hybrid:  per-layer list (KV ring for local attn, RGLRU state).
@@ -456,6 +456,33 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
         return EncDecState(c, cross, cross,
                            jnp.full((batch,), max_seq - 1, jnp.int32))
     raise ValueError(cfg.family)
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, max_seq: int):
+    """Truly EMPTY decode state (pos = 0, no stored positions).
+
+    ``init_decode_state`` fills positions for the dry-run serve_step
+    cells (pos = max_seq - 1, stored_pos = arange); the serving engine's
+    'full' prefill mode instead starts every slot empty and lets
+    ``prefill`` seed the cache, so attention can never see phantom
+    zero-valued keys.  encdec is not supported (its prefill needs
+    encoder frames the slot engine does not carry)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return init_kv_cache(cfg, batch, max_seq)
+    if cfg.family == "ssm":
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape),
+            init_ssm_cache(cfg, batch))
+        return SSMState(stacked, jnp.zeros((batch,), jnp.int32))
+    if cfg.family == "hybrid":
+        kinds = T.hybrid_layer_kinds(cfg)
+        caches = [init_kv_cache(cfg, batch, max_seq, n_layers=1)
+                  if k == "attn" else init_rglru_cache(cfg, batch)
+                  for k in kinds]
+        return HybridState(tuple(caches), jnp.zeros((batch,), jnp.int32))
+    raise ValueError(
+        f"init_serve_state: family {cfg.family!r} unsupported "
+        "(encdec prefill needs frames; use prefill='cheap')")
 
 
 def _reset_kv_slot(c: KVCache, f: KVCache, i: int) -> KVCache:

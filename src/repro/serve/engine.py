@@ -1,24 +1,38 @@
-"""Continuous-batching serving engine with dynamic load balancing.
+"""Slot-based continuous-batching serving engine with KV-cache migration.
 
 The serving analogue of the paper's adaptive loop: requests arrive and
-finish continuously, so per-device KV bytes drift exactly like mesh load
+finish continuously, so per-group KV bytes drift exactly like mesh load
 under refinement.  Every ``rebalance_every`` steps the engine:
 
-  1. weighs each active request by its live KV footprint (+ expected
-     remaining tokens),
+  1. weighs each active request by its live KV footprint (prompt +
+     generated tokens),
   2. partitions requests across device groups with the 1-D partitioner
-     (requests linearized by arrival id = incremental, like the SFC order),
-  3. applies the Oliker--Biswas remap so surviving requests stay on their
-     current group -- migration is only the unavoidable remainder.
+     (requests linearized by arrival id = incremental, like the SFC
+     order),
+  3. applies the Oliker--Biswas remap so surviving requests stay on
+     their current group -- migration is only the unavoidable remainder,
+  4. physically migrates each moved request's KV slot (the per-arch
+     cache pytree: k, v, stored_pos, position, recurrent state) between
+     groups through ``distributed.migrate.migrate_items`` -- the serving
+     twin of the FEM element migration -- and logs ``moved_kv_bytes``
+     next to ``TotalV`` / ``imbalance``.
 
-On this container the device groups are simulated (the engine actually
-decodes on one device) but the balancer/migration accounting is the real
-algorithm -- the same calls the multi-pod launcher makes.
+The engine is declarative (``repro.serve.spec``): a frozen ``ServeSpec``
+resolved by ``ServeSession`` into registered stage functions
+``prefill -> insert -> generate -> rebalance``.  KV slots live sharded
+over the group mesh (``(g, slots/g, ...)`` via shard_map, see
+``repro.serve.slots``); prefill runs as its own jitted call per request
+and inserts into a free slot; decode runs as ONE sharded call over all
+groups.  The old single-device simulation survives as the stage variants
+``prefill='cheap'`` / ``decode='replicated'`` / ``rebalance='tags'`` --
+the fast parity oracle -- and behind the deprecated ``ServeEngine``
+constructor shim.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -27,7 +41,12 @@ import numpy as np
 
 from ..core import Balancer, BalanceSpec
 from ..models import ModelConfig
-from .decode import decode_step, init_decode_state, prefill, reset_slot
+from .decode import (decode_step, init_decode_state, init_serve_state,
+                     prefill, reset_slot)
+from .slots import (SlotMigrator, build_serve_mesh, make_sharded_decode,
+                    slot_axes, slot_nbytes, write_slot)
+from .spec import (ServeSpec, get_serve_stage, register_serve_stage,
+                   resolve_serve_variants)
 
 
 @dataclasses.dataclass
@@ -37,98 +56,371 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    group: int = 0                  # simulated device group
+    group: int = 0                  # device group currently hosting the slot
+    slot: Optional[int] = None      # global slot id while active
+    migrations: int = 0             # inter-group KV migrations survived
+    # wall-clock stamps for the trace driver (TTFT / ITL percentiles)
+    t_submit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+    t_tokens: List[float] = dataclasses.field(default_factory=list)
+
+    def kv_weight(self) -> float:
+        """Live KV footprint proxy: prompt + generated tokens."""
+        return float(len(self.out) + len(self.prompt))
 
 
-class ServeEngine:
-    """Slot-based continuous batching over a fixed decode batch."""
+# ---------------------------------------------------------------------------
+# Stage implementations
+# ---------------------------------------------------------------------------
+
+@register_serve_stage("prefill", "cheap")
+def _prefill_cheap(session: "ServeSession", req: Request):
+    """Cheap-prefill oracle: seed only the last prompt token, empty KV.
+
+    The old engine's simulation mode -- no prompt forward, so the first
+    output token is produced by the first decode step."""
+    return int(req.prompt[-1]), None, None
+
+
+@register_serve_stage("prefill", "full")
+def _prefill_full(session: "ServeSession", req: Request):
+    """Real prefill: forward the prompt, emit the first output token and
+    the batch-1 cache pytree the insert stage writes into the slot.
+
+    One jitted call per distinct prompt length (bucket prompt lengths in
+    the arrival trace to bound compiles)."""
+    if len(req.prompt) + req.max_new > session.spec.max_seq:
+        raise ValueError(
+            f"request {req.rid}: prompt ({len(req.prompt)}) + max_new "
+            f"({req.max_new}) exceeds max_seq ({session.spec.max_seq})")
+    tokens = jnp.asarray(np.asarray(req.prompt), jnp.int32)[None]
+    logits, row = session._prefill_jit(session.params, tokens)
+    tok = int(jnp.argmax(logits[0]))
+    return tok, row, tok
+
+
+@register_serve_stage("insert", "slot")
+def _insert_slot(session: "ServeSession", req: Request, slot: int,
+                 seed_tok: int, row) -> None:
+    """Reset the freed slot to pristine rows, then merge the prefill
+    cache (if any) and seed the next decode token."""
+    session.state = reset_slot(session.state, session._fresh, slot,
+                               session.cfg)
+    if row is not None:
+        session.state = write_slot(session.state, row, slot, session.axes)
+    session.tokens = session.tokens.at[slot, 0].set(seed_tok)
+
+
+@register_serve_stage("generate", "replicated")
+def _generate_replicated(session: "ServeSession"):
+    logits, session.state = session._decode_jit(
+        session.params, session.state, session.tokens)
+    return logits
+
+
+@register_serve_stage("generate", "sharded")
+def _generate_sharded(session: "ServeSession"):
+    """One shard_map decode call over all groups: each group advances its
+    own slots, params replicated, KV slots resident on the group mesh."""
+    logits, session.state = session._decode_jit(
+        session.params, session.state, session.tokens)
+    return logits
+
+
+@register_serve_stage("rebalance", "tags")
+def _rebalance_tags(session: "ServeSession") -> Optional[Dict]:
+    """Plan-level oracle: repartition updates group labels only (the old
+    engine's simulation -- no KV bytes move)."""
+    live = session._live()
+    if len(live) < 2:
+        return None
+    res = session._balance(live)
+    for (_, r), g in zip(live, np.asarray(res.parts)):
+        r.group = int(g)
+    return session._log_entry(res, moved_kv_bytes=0, n_moved=0, deferred=0)
+
+
+@register_serve_stage("rebalance", "kv")
+def _rebalance_kv(session: "ServeSession") -> Optional[Dict]:
+    """The real thing: repartition, then migrate each moved request's KV
+    slot between groups with the all_to_all executor."""
+    live = session._live()
+    if len(live) < 2:
+        return None
+    res = session._balance(live)
+    moves, deferred = session._plan_moves(live, np.asarray(res.parts))
+    stats = session._apply_moves(moves)
+    return session._log_entry(
+        res, moved_kv_bytes=int(stats["moved_bytes"]),
+        n_moved=len(moves), deferred=deferred)
+
+
+# ---------------------------------------------------------------------------
+# ServeSession
+# ---------------------------------------------------------------------------
+
+class ServeSession:
+    """Resolve a ``ServeSpec`` into a running slot-based engine.
+
+    The decode state is one per-arch cache pytree whose batch dimension
+    is the global slot axis (``spec.total_slots`` rows, group g owning
+    rows ``[g*spg, (g+1)*spg)``); a request's ``group`` IS its slot's
+    group.  Admission fills the least-loaded group's lowest free slot;
+    the rebalance stage corrects drift by migrating KV slots.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, spec: ServeSpec, *,
+                 devices=None):
+        self.params, self.cfg, self.spec = params, cfg, spec
+        self._variants = resolve_serve_variants(spec)
+        total = spec.total_slots
+        if spec.prefill == "full":
+            self.state = init_serve_state(cfg, total, spec.max_seq)
+        else:
+            # the dry-run-filled state: the cheap oracle's historical
+            # semantics (positions pre-wound, zero-valued phantom keys)
+            self.state = init_decode_state(cfg, total, spec.max_seq)
+        self._fresh = self.state
+        self.axes = slot_axes(cfg)
+        self.kv_slot_bytes = slot_nbytes(self.state, self.axes)
+        self.tokens = jnp.zeros((total, 1), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * total
+        self.queue: List[Request] = []
+        self.step_count = 0
+        self.migration_log: List[Dict] = []
+        self.balancer = Balancer.from_spec(spec.balance)
+
+        self.mesh = None
+        self._migrator = None
+        if spec.decode == "sharded":
+            self.mesh = build_serve_mesh(spec.groups, devices)
+            self._decode_jit = make_sharded_decode(cfg, self.mesh, self.axes)
+        else:
+            self._decode_jit = jax.jit(
+                lambda p, s, t: decode_step(p, s, t, cfg))
+        if self._variants["rebalance"] == "kv":
+            if self.mesh is None:
+                self.mesh = build_serve_mesh(spec.groups, devices)
+            self._migrator = SlotMigrator(cfg, self.mesh, self.axes,
+                                          self.state)
+        self._prefill_jit = jax.jit(
+            lambda p, t: prefill(p, {"tokens": t}, cfg,
+                                 max_seq=spec.max_seq))
+        # resolved stage functions
+        self._prefill = get_serve_stage("prefill", self._variants["prefill"])
+        self._insert = get_serve_stage("insert", self._variants["insert"])
+        self._generate = get_serve_stage("generate",
+                                         self._variants["generate"])
+        self._rebalance = (
+            get_serve_stage("rebalance", self._variants["rebalance"])
+            if self._variants["rebalance"] is not None else None)
+
+    # -- bookkeeping helpers -------------------------------------------------
+    @property
+    def spg(self) -> int:
+        return self.spec.slots_per_group
+
+    def _live(self) -> List[Tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.active) if r is not None]
+
+    def _group_load(self, g: int) -> float:
+        return sum(r.kv_weight() for i, r in self._live() if r.group == g)
+
+    def _free_slots(self, g: int) -> List[int]:
+        return [s for s in self.spec.usable_slots(g)
+                if self.active[s] is None]
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue:
+            # least-loaded group with a free usable slot (lowest id ties)
+            cands = [(self._group_load(g), g, free[0])
+                     for g in range(self.spec.groups)
+                     if (free := self._free_slots(g))]
+            if not cands:
+                return
+            _, g, slot = min(cands)
+            req = self.queue.pop(0)
+            seed_tok, row, first_tok = self._prefill(self, req)
+            self._insert(self, req, slot, seed_tok, row)
+            req.slot, req.group = slot, g
+            if first_tok is not None:       # full prefill emits token 1
+                now = time.perf_counter()
+                req.out.append(first_tok)
+                req.t_first = now
+                req.t_tokens.append(now)
+            if len(req.out) >= req.max_new:
+                req.done, req.t_done = True, time.perf_counter()
+                req.slot = None
+                continue                    # slot stays free
+            self.active[slot] = req
+
+    # -- rebalancing ---------------------------------------------------------
+    def _balance(self, live):
+        w = jnp.asarray([r.kv_weight() for _, r in live], jnp.float32)
+        coords = jnp.stack(
+            [jnp.asarray([float(r.rid) for _, r in live]),
+             jnp.zeros(len(live)), jnp.zeros(len(live))], 1)
+        old = jnp.asarray([r.group for _, r in live], jnp.int32)
+        return self.balancer.balance(w, coords=coords, old_parts=old)
+
+    def _log_entry(self, res, **extra) -> Dict:
+        entry = {"step": self.step_count,
+                 "TotalV": float(res.total_v),
+                 "imbalance": float(res.imbalance),
+                 "retained": float(res.retained)}
+        entry.update(extra)
+        return entry
+
+    def _plan_moves(self, live, parts) -> Tuple[List[Tuple[int, int]], int]:
+        """Greedy move plan: heaviest movers first, a vacated source slot
+        re-enters its group's free pool so chains resolve in one round.
+        Movers whose destination group has no free slot are deferred to a
+        later rebalance (counted, never silently dropped)."""
+        free = {g: self._free_slots(g) for g in range(self.spec.groups)}
+        movers = [(slot, r, int(g)) for (slot, r), g in zip(live, parts)
+                  if int(g) != r.group]
+        movers.sort(key=lambda t: (-t[1].kv_weight(), t[1].rid))
+        moves, deferred = [], 0
+        for slot, req, g in movers:
+            if free[g]:
+                dst = free[g].pop(0)
+                moves.append((slot, dst))
+                free[req.group].append(slot)
+                free[req.group].sort()
+            else:
+                deferred += 1
+        return moves, deferred
+
+    def _apply_moves(self, moves: List[Tuple[int, int]]) -> Dict[str, float]:
+        """Execute a move plan: ship the KV slot rows through the
+        all_to_all executor, carry each mover's pending decode token, and
+        rewire the host-side slot bookkeeping."""
+        if not moves:
+            return {"moved_bytes": 0.0, "n_moved": 0}
+        self.state, stats = self._migrator(self.state, moves)
+        src = jnp.asarray([s for s, _ in moves])
+        dst = jnp.asarray([d for _, d in moves])
+        self.tokens = self.tokens.at[dst].set(self.tokens[src])
+        moving = {s: self.active[s] for s, _ in moves}
+        for s, _ in moves:
+            self.active[s] = None
+        for s, d in moves:
+            req = moving[s]
+            self.active[d] = req
+            req.slot, req.group = d, d // self.spg
+            req.migrations += 1
+        # host-exact byte count next to the executor's float scalars
+        stats["moved_kv_bytes"] = len(moves) * self.kv_slot_bytes
+        return stats
+
+    def migrate_request(self, rid: int, dst_group: int) -> Dict[str, float]:
+        """Force one request's KV slot to a free slot of ``dst_group``
+        (test/ops hook -- the rebalance stage's move machinery on a
+        single request).  Logs the move like a rebalance would."""
+        live = {r.rid: (s, r) for s, r in self._live()}
+        if rid not in live:
+            raise ValueError(f"request {rid} is not active")
+        slot, req = live[rid]
+        if dst_group == req.group:
+            return {"moved_bytes": 0.0, "n_moved": 0}
+        free = self._free_slots(dst_group)
+        if not free:
+            raise ValueError(f"no free slot in group {dst_group}")
+        stats = self._apply_moves([(slot, free[0])])
+        self.migration_log.append(
+            {"step": self.step_count, "TotalV": req.kv_weight(),
+             "imbalance": float("nan"), "retained": 0.0,
+             "moved_kv_bytes": int(stats["moved_kv_bytes"]),
+             "n_moved": 1, "deferred": 0, "forced": True})
+        return stats
+
+    # -- the engine step -----------------------------------------------------
+    def step(self) -> None:
+        self._admit()
+        logits = self._generate(self)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        self.tokens = next_tok[:, None].astype(jnp.int32)
+        toks = np.asarray(next_tok)
+        now = time.perf_counter()
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(toks[i]))
+            if req.t_first is None:
+                req.t_first = now
+            req.t_tokens.append(now)
+            if len(req.out) >= req.max_new:
+                req.done, req.t_done = True, now
+                req.slot = None
+                self.active[i] = None
+        self.step_count += 1
+        if (self._rebalance is not None
+                and self.step_count % self.spec.rebalance_every == 0):
+            entry = self._rebalance(self)
+            if entry is not None:
+                self.migration_log.append(entry)
+
+    def run(self, max_steps: int = 512) -> None:
+        while (any(r is not None for r in self.active) or self.queue) \
+                and max_steps > 0:
+            self.step()
+            max_steps -= 1
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shim: the old ServeEngine constructor
+# ---------------------------------------------------------------------------
+
+_DEPRECATION_WARNED = False
+
+
+def _warn_deprecated_once() -> None:
+    """Emit the legacy-API DeprecationWarning once per process."""
+    global _DEPRECATION_WARNED
+    if not _DEPRECATION_WARNED:
+        _DEPRECATION_WARNED = True
+        warnings.warn(
+            "ServeEngine(slots=..., n_groups=...) is deprecated; build a "
+            "repro.serve.ServeSpec and use ServeSession(params, cfg, spec) "
+            "instead", DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warning() -> None:
+    """Testing hook: allow the once-per-process warning to fire again."""
+    global _DEPRECATION_WARNED
+    _DEPRECATION_WARNED = False
+
+
+class ServeEngine(ServeSession):
+    """DEPRECATED shim over ``ServeSession`` (old kwargs map 1:1).
+
+    Preserves the old engine's semantics exactly: cheap prefill,
+    single-device replicated decode, and tag-only rebalancing (group
+    labels move, KV stays put).  Migration guide::
+
+        ServeEngine(params, cfg, slots=8, n_groups=4, ...)
+            -> ServeSession(params, cfg,
+                            ServeSpec(slots=8, groups=4, ...))
+    """
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 8,
                  max_seq: int = 256, n_groups: int = 4,
                  rebalance_every: int = 16, backend: str = "host",
                  balance_spec: Optional[BalanceSpec] = None):
-        """The rebalancer is declarative: requests linearized by arrival
-        id (``method='linear'`` -- the incremental order, like the SFC
-        curve) and split by the weighted 1-D partitioner.  Pass
-        ``balance_spec`` to override; ``backend='sharded'`` runs the
-        pipeline in one jitted shard_map region over ``n_groups`` devices
-        -- the call the multi-pod launcher makes."""
-        self.params, self.cfg = params, cfg
-        self.slots, self.max_seq = slots, max_seq
-        self.n_groups = n_groups
-        self.rebalance_every = rebalance_every
-        self.state = init_decode_state(cfg, slots, max_seq)
-        # pristine reference state: freed slots are reset from its rows on
-        # admit, so a reused slot can't attend to the previous occupant's KV
-        self._fresh = self.state
-        self.tokens = jnp.zeros((slots, 1), jnp.int32)
-        self.active: List[Optional[Request]] = [None] * slots
-        self.queue: List[Request] = []
-        self.step_count = 0
+        _warn_deprecated_once()
         if balance_spec is None:
-            # warm-started k-section: each rebalance seeds its splitter
-            # search from the previous one's converged splitters
             balance_spec = BalanceSpec(p=n_groups, method="linear",
                                        oneD="ksection", warm_start=True,
                                        backend=backend)
-        self.balancer = Balancer.from_spec(balance_spec)
-        self.migration_log: List[Dict] = []
-        self._decode = jax.jit(
-            lambda p, s, t: decode_step(p, s, t, cfg))
-
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _admit(self) -> None:
-        for i, slot in enumerate(self.active):
-            if slot is None and self.queue:
-                req = self.queue.pop(0)
-                # prefill one request (batch-1) and merge its cache into
-                # slot i; for the simulation we seed with the prompt's
-                # last token and an empty cache (cheap-prefill mode).
-                # The slot may have hosted a finished request: clear its
-                # KV rows and position first, or the new request decodes
-                # against the old occupant's context.
-                self.state = reset_slot(self.state, self._fresh, i, self.cfg)
-                self.active[i] = req
-                self.tokens = self.tokens.at[i, 0].set(int(req.prompt[-1]))
-
-    def _rebalance(self) -> None:
-        live = [(i, r) for i, r in enumerate(self.active) if r is not None]
-        if len(live) < 2:
-            return
-        # weight = KV footprint proxy: tokens generated so far + prompt;
-        # linearized by arrival id (the 'linear' keys stage reads x)
-        w = jnp.asarray([len(r.out) + len(r.prompt) for _, r in live],
-                        jnp.float32)
-        coords = jnp.stack([jnp.asarray([float(r.rid) for _, r in live]),
-                            jnp.zeros(len(live)), jnp.zeros(len(live))], 1)
-        old = jnp.asarray([r.group for _, r in live], jnp.int32)
-        res = self.balancer.balance(w, coords=coords, old_parts=old)
-        self.migration_log.append(
-            {"step": self.step_count,
-             "TotalV": float(res.total_v),
-             "imbalance": float(res.imbalance)})
-        for (i, r), g in zip(live, np.asarray(res.parts)):
-            r.group = int(g)
-
-    def step(self) -> None:
-        self._admit()
-        logits, self.state = self._decode(self.params, self.state, self.tokens)
-        next_tok = jnp.argmax(logits[:, -1], axis=-1)
-        self.tokens = next_tok[:, None].astype(jnp.int32)
-        for i, req in enumerate(self.active):
-            if req is None:
-                continue
-            req.out.append(int(next_tok[i]))
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self.active[i] = None
-        self.step_count += 1
-        if self.step_count % self.rebalance_every == 0:
-            self._rebalance()
-
-    def run(self, max_steps: int = 512) -> None:
-        while (any(self.active) or self.queue) and max_steps > 0:
-            self.step()
-            max_steps -= 1
+        spec = ServeSpec(slots=slots, groups=n_groups, max_seq=max_seq,
+                         rebalance_every=rebalance_every, prefill="cheap",
+                         decode="replicated", rebalance="tags",
+                         balance=balance_spec)
+        super().__init__(params, cfg, spec)

@@ -1,0 +1,227 @@
+"""Sharded KV-cache slots: layout, decode call, and inter-group migration.
+
+The serving engine's decode state is the per-arch cache pytree from
+``repro.serve.decode`` (``KVCache`` / ``SSMState`` / ``HybridState`` /
+``EncDecState``) with the batch dimension reinterpreted as a global
+*slot* axis of length ``groups * slots_per_group``.  This module owns
+everything that touches that axis:
+
+* ``slot_axes``     -- a pytree (same structure as the state, int leaves)
+  naming which axis of each leaf is the slot axis; every other helper is
+  written generically against it, so all arch families share the code.
+* ``build_serve_mesh`` / ``make_sharded_decode`` -- the group mesh and
+  the one-shard_map decode call: each group decodes its own
+  ``slots_per_group`` slots with replicated params, giving KV slots the
+  ``(g, slots/g, ...)`` on-device layout instead of a host-side tag.
+* ``write_slot`` -- merge a batch-1 prefill cache into one global slot.
+* ``SlotMigrator``  -- the serving twin of the FEM element migration:
+  when the balancer moves a request between groups, its entire KV slot
+  row (k, v, stored_pos, position, recurrent state, ...) ships through
+  ``distributed.migrate.migrate_items`` -- the same fixed-capacity
+  ``all_to_all`` executor -- and lands in a designated free slot of the
+  destination group.  Weights are the slot's KV bytes, so the executor's
+  volume scalars are real migrated bytes.
+
+Migration ordering contract: ``migrate_items`` compacts arrivals
+source-major (and, within a source, in ascending local-slot order), so
+the host can precompute for every destination group the receive-index ->
+destination-slot map -- the move plan is host-known, only the payload
+stays on device.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..distributed.migrate import migrate_items, payload_nbytes
+from ..distributed.sharding import shard_map
+from ..models import ModelConfig
+from ..models import transformer as T
+from ..models.rglru import RGLRUCache
+from ..models.ssm import SSMCache
+from .decode import EncDecState, HybridState, KVCache, SSMState, decode_step
+
+AXIS = "serve"
+
+# per-family slot-axis templates: the KV k/v tensors carry batch on axis
+# 1 ((L, b, hkv, S, hd)); positions and recurrent states carry it on 0
+_KV_AXES = KVCache(k=1, v=1, stored_pos=0, pos=0)
+
+
+def slot_axes(cfg: ModelConfig):
+    """Pytree of slot-axis indices matching ``init_decode_state``'s (and
+    ``init_serve_state``'s) structure for ``cfg.family``."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _KV_AXES
+    if cfg.family == "ssm":
+        return SSMState(layers=SSMCache(state=1, conv=1), pos=0)
+    if cfg.family == "hybrid":
+        kinds = T.hybrid_layer_kinds(cfg)
+        return HybridState(
+            layers=tuple(_KV_AXES if k == "attn"
+                         else RGLRUCache(h=0, conv=0) for k in kinds),
+            pos=0)
+    if cfg.family == "encdec":
+        return EncDecState(self_kv=_KV_AXES, cross_k=1, cross_v=1, pos=0)
+    raise ValueError(cfg.family)
+
+
+def slot_pspecs(axes):
+    """PartitionSpec pytree sharding every leaf's slot axis over AXIS."""
+    return jax.tree.map(lambda ax: P(*((None,) * ax + (AXIS,))), axes)
+
+
+def slot_nbytes(state, axes) -> int:
+    """Bytes of ONE slot row across the whole cache pytree -- the unit
+    the migration volume accounting is denominated in."""
+    rows = jax.tree.map(
+        lambda leaf, ax: jax.ShapeDtypeStruct(
+            (leaf.shape[ax],) + leaf.shape[:ax] + leaf.shape[ax + 1:],
+            leaf.dtype),
+        state, axes)
+    return payload_nbytes(rows)
+
+
+def n_slots_of(state, axes) -> int:
+    """Global slot-axis length of a decode-state pytree."""
+    leaves, ax_leaves = jax.tree.leaves(state), jax.tree.leaves(axes)
+    return int(leaves[0].shape[ax_leaves[0]])
+
+
+def write_slot(state, row, slot: int, axes):
+    """Return ``state`` with global slot ``slot`` overwritten by ``row``
+    (a batch-1 state pytree, e.g. a prefill cache).  Shapes outside the
+    slot axis must match -- prefill with the same ``max_seq``."""
+    def put(leaf, r, ax):
+        idx = (slice(None),) * ax
+        return leaf.at[idx + (slot,)].set(r[idx + (0,)])
+    return jax.tree.map(put, state, row, axes)
+
+
+def build_serve_mesh(groups: int, devices=None) -> Mesh:
+    devices = list(devices) if devices is not None else jax.devices()
+    if len(devices) < groups:
+        raise ValueError(
+            f"need >= {groups} devices for sharded serving, have "
+            f"{len(devices)} (set --xla_force_host_platform_device_count)")
+    return Mesh(np.array(devices[:groups]), (AXIS,))
+
+
+def make_sharded_decode(cfg: ModelConfig, mesh: Mesh, axes):
+    """One jitted shard_map decode call over all groups.
+
+    Params are replicated; the state pytree is sharded on its slot axes
+    and tokens/logits on the slot (batch) dim.  Decode is batch-parallel
+    (no cross-slot collectives), so each group independently advances its
+    ``slots_per_group`` slots -- the sharded twin of the replicated
+    ``decode_step`` oracle, bit-identical per slot for families without
+    cross-batch coupling (MoE capacity dropping couples slots in a
+    group, so only the dense/ssm/hybrid families are migration-exact).
+    """
+    sspec = slot_pspecs(axes)
+
+    def body(params, state, tokens):
+        return decode_step(params, state, tokens, cfg)
+
+    kw = dict(mesh=mesh, in_specs=(P(), sspec, P(AXIS)),
+              out_specs=(P(AXIS), sspec))
+    try:
+        fn = shard_map(body, check_rep=False, **kw)
+    except TypeError:                    # kwarg renamed in newer JAX
+        fn = shard_map(body, check_vma=False, **kw)
+    return jax.jit(fn)
+
+
+class SlotMigrator:
+    """Ship KV slot rows between groups with the all_to_all executor.
+
+    ``__call__(state, moves)`` with ``moves`` a sequence of
+    ``(src_slot, dst_slot)`` global slot ids executes every move in ONE
+    ``migrate_items`` exchange (a destination slot may itself be vacated
+    in the same round -- payload extraction happens before the scatter,
+    exactly like the FEM element migration).  Returns the new state and
+    the executor's on-device volume scalars.
+    """
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, axes, state_template):
+        self.cfg, self.mesh, self.axes = cfg, mesh, axes
+        self.groups = mesh.devices.size
+        self.slots = n_slots_of(state_template, axes)
+        self.spg = self.slots // self.groups
+        self.bytes_per_slot = slot_nbytes(state_template, axes)
+        self._fn = self._build()
+
+    def _build(self):
+        g, spg = self.groups, self.spg
+        sspec = slot_pspecs(self.axes)
+        w_bytes = float(self.bytes_per_slot)
+
+        def body(state_l, dest_l, valid_l, recv_l):
+            payload = jax.tree.map(lambda leaf, ax: jnp.moveaxis(leaf, ax, 0),
+                                   state_l, self.axes)
+            w = jnp.full((spg,), w_bytes, jnp.float32)
+            mig = migrate_items(payload, dest_l, w, AXIS, g,
+                                valid=valid_l, capacity=spg)
+            # arrivals land in their host-designated local slot; invalid
+            # receive rows carry recv_l == spg and are dropped
+            new_payload = jax.tree.map(
+                lambda leaf, recv: leaf.at[recv_l].set(recv, mode="drop"),
+                payload, mig.payload)
+            new_state = jax.tree.map(
+                lambda leaf, ax: jnp.moveaxis(leaf, 0, ax),
+                new_payload, self.axes)
+            stats = {
+                "moved_bytes": jax.lax.psum(mig.w_sent, AXIS),
+                "received_bytes": jax.lax.psum(mig.w_received, AXIS),
+                "n_moved": jax.lax.psum(mig.n_recv, AXIS),
+                "overflow": jax.lax.psum(mig.overflow, AXIS),
+            }
+            return new_state, stats
+
+        kw = dict(mesh=self.mesh,
+                  in_specs=(sspec, P(AXIS), P(AXIS), P(AXIS)),
+                  out_specs=(sspec, P()))
+        try:
+            fn = shard_map(body, check_rep=False, **kw)
+        except TypeError:
+            fn = shard_map(body, check_vma=False, **kw)
+        return jax.jit(fn)
+
+    def plan(self, moves: Sequence[Tuple[int, int]]):
+        """Host-side move plan -> (dest, valid, recv_slot) device operands.
+
+        ``recv_slot`` encodes, per destination group, the local slot of
+        the j-th arrival (arrival order = ascending source slot id, the
+        executor's source-major compaction order); unused receive rows
+        point at ``slots_per_group`` so the scatter drops them."""
+        g, spg = self.groups, self.spg
+        dest = np.arange(self.slots, dtype=np.int32) // spg
+        valid = np.zeros(self.slots, bool)
+        recv = np.full(self.slots, spg, np.int32)
+        counts = [0] * g
+        for src, dst in sorted(moves):          # ascending src slot id
+            if not 0 <= src < self.slots or not 0 <= dst < self.slots:
+                raise ValueError(f"move {(src, dst)} outside slot range")
+            if valid[src]:
+                raise ValueError(f"slot {src} moved twice in one round")
+            dg = dst // spg
+            dest[src] = dg
+            valid[src] = True
+            recv[dg * spg + counts[dg]] = dst % spg
+            counts[dg] += 1
+        if max(counts, default=0) > spg:
+            raise ValueError("more arrivals than slots in one group")
+        return (jnp.asarray(dest), jnp.asarray(valid), jnp.asarray(recv))
+
+    def __call__(self, state, moves: Sequence[Tuple[int, int]]
+                 ) -> Tuple[Any, Dict[str, float]]:
+        if not moves:
+            return state, {"moved_bytes": 0.0, "received_bytes": 0.0,
+                           "n_moved": 0, "overflow": 0}
+        dest, valid, recv = self.plan(moves)
+        state, stats = self._fn(state, dest, valid, recv)
+        return state, {k: float(v) for k, v in stats.items()}

@@ -1,0 +1,208 @@
+"""Declarative serving API: ``ServeSpec`` + serve-stage registry.
+
+The serving engine is the DLB paper's workload at "millions of users"
+scale: requests arrive and finish continuously, per-group KV bytes drift
+exactly like mesh load under refinement, and the cheapest correction is
+a remap-aware repartition plus minimal migration.  Like ``BalanceSpec``
+(the balance pipeline) and ``AdaptSpec`` (the adaptive loop) before it,
+the engine is declarative:
+
+* ``ServeSpec``     -- a frozen ``Spec`` dataclass describing one engine:
+  slot/group topology (``slots`` logical decode slots spread over
+  ``groups`` device groups), context budget (``max_seq``), the rebalance
+  trigger (``rebalance_every`` + ``rebalance`` mode), the prefill and
+  decode stage variants, and the nested ``balance: BalanceSpec`` that
+  drives the repartition.  Hashable, leaf-free pytree, plain-dict
+  round-trip (nested spec included).
+* stage registry    -- the engine's step is the fixed JetStream-style
+  pipeline ``prefill -> insert -> generate -> rebalance``; each stage is
+  a registered ``(stage, variant)`` function so new decode backends or
+  rebalance policies register variants instead of forking the engine:
+
+      prefill   'full' (real prompt forward seeding the KV slot) |
+                'cheap' (seed only the last prompt token -- the fast
+                oracle for tests, the old engine's simulation mode)
+      insert    'slot' (reset the freed slot, write the prefill cache)
+      generate  'sharded' (one shard_map decode call over all groups,
+                KV slots live sharded on the group mesh) |
+                'replicated' (single-device decode oracle)
+      rebalance 'kv' (repartition + migrate KV slots between groups via
+                ``distributed.migrate.migrate_items`` -- the serving
+                twin of the FEM element migration) |
+                'tags' (repartition updates group labels only -- the
+                plan-level oracle) | 'never'
+
+* ``ServeSession``  (in ``repro.serve.engine``) resolves a spec into the
+  stage functions and runs the continuous-batching loop.
+
+Stage signatures (host-side orchestration; the heavy math inside each
+stage is jitted):
+
+    prefill(session, req)                 -> (seed_token, row_state,
+                                              first_token_or_None)
+    insert(session, req, slot, seed, row) -> None   (mutates session)
+    generate(session)                     -> logits (slots, 1, vocab)
+    rebalance(session)                    -> log-entry dict or None
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, ClassVar, Dict, Mapping, Optional, Tuple
+
+from ..core.spec import BalanceSpec, Spec, register_spec_pytree
+
+SERVE_STAGES = ("prefill", "insert", "generate", "rebalance")
+PREFILL_MODES = ("full", "cheap")
+DECODE_BACKENDS = ("sharded", "replicated")
+REBALANCE_MODES = ("kv", "tags", "never")
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec
+# ---------------------------------------------------------------------------
+
+@register_spec_pytree
+@dataclasses.dataclass(frozen=True)
+class ServeSpec(Spec):
+    """Declarative description of one slot-based serving engine.
+
+    Fields (old ``ServeEngine`` kwargs map 1:1, see the deprecated shim):
+
+    slots              logical decode slots (concurrent requests); spread
+                       over the groups as evenly as possible -- group g
+                       gets ``slots//groups`` (+1 for the first
+                       ``slots % groups`` groups).  The physical slot
+                       axis is padded to ``groups * slots_per_group`` so
+                       shard_map shapes stay static
+    groups             device groups the KV slots are sharded over; needs
+                       that many JAX devices for ``decode='sharded'``
+    max_seq            per-slot KV context budget (prompt + generated)
+    rebalance_every    run the rebalance stage every N engine steps
+    prefill            'full' | 'cheap' (see module docstring); 'cheap'
+                       is the fast oracle -- it skips the prompt forward
+                       and seeds only the last prompt token
+    decode             'sharded' | 'replicated' generate-stage variant
+    rebalance          'kv' | 'tags' | 'never' rebalance-stage variant;
+                       'kv' physically migrates the per-request KV slot
+                       (k, v, stored_pos, position -- the per-arch cache
+                       pytree) between groups with the all_to_all
+                       migration executor and logs ``moved_kv_bytes``
+    balance            nested ``repro.core.BalanceSpec`` driving the
+                       repartition; ``None`` defaults to the serving
+                       configuration (requests linearized by arrival id,
+                       warm-started k-section over ``groups`` parts).
+                       Its ``p`` must equal ``groups``
+    """
+    slots: int = 8
+    groups: int = 4
+    max_seq: int = 256
+    rebalance_every: int = 16
+    prefill: str = "full"
+    decode: str = "sharded"
+    rebalance: str = "kv"
+    balance: Optional[BalanceSpec] = None
+
+    _NESTED_SPECS: ClassVar[Mapping[str, type]] = {"balance": BalanceSpec}
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.groups < 1:
+            raise ValueError(f"groups must be >= 1, got {self.groups}")
+        if self.max_seq < 2:
+            raise ValueError(f"max_seq must be >= 2, got {self.max_seq}")
+        if self.rebalance_every < 1:
+            raise ValueError("rebalance_every must be >= 1 (use "
+                             "rebalance='never' to disable rebalancing)")
+        if self.prefill not in PREFILL_MODES:
+            raise ValueError(f"unknown prefill mode {self.prefill!r}; "
+                             f"choose from {PREFILL_MODES}")
+        if self.decode not in DECODE_BACKENDS:
+            raise ValueError(f"unknown decode backend {self.decode!r}; "
+                             f"choose from {DECODE_BACKENDS}")
+        if self.rebalance not in REBALANCE_MODES:
+            raise ValueError(f"unknown rebalance mode {self.rebalance!r}; "
+                             f"choose from {REBALANCE_MODES}")
+        if self.balance is None:
+            object.__setattr__(
+                self, "balance",
+                BalanceSpec(p=self.groups, method="linear", oneD="ksection",
+                            warm_start=True))
+        if not isinstance(self.balance, BalanceSpec):
+            raise ValueError("balance must be a BalanceSpec (got "
+                             f"{type(self.balance).__name__})")
+        if self.balance.p != self.groups:
+            raise ValueError(
+                f"balance.p ({self.balance.p}) must equal groups "
+                f"({self.groups}): the repartition assigns one part per "
+                "device group")
+
+    # -- physical slot topology --------------------------------------------
+    @property
+    def slots_per_group(self) -> int:
+        """Physical slots per group (slot axis padded to a multiple)."""
+        return -(-self.slots // self.groups)
+
+    @property
+    def total_slots(self) -> int:
+        """Physical slot-axis length: ``groups * slots_per_group``."""
+        return self.groups * self.slots_per_group
+
+    def group_quota(self, g: int) -> int:
+        """Usable (logical) slots in group ``g`` -- the first ``quota``
+        local slots; the remainder up to ``slots_per_group`` is padding
+        that the admission policy never fills."""
+        return self.slots // self.groups + (1 if g < self.slots % self.groups
+                                            else 0)
+
+    def usable_slots(self, g: int):
+        """Global ids of the usable slots of group ``g``."""
+        base = g * self.slots_per_group
+        return range(base, base + self.group_quota(g))
+
+
+# ---------------------------------------------------------------------------
+# Stage registry (mirrors core.spec's and fem.adapt's)
+# ---------------------------------------------------------------------------
+
+_SERVE_REGISTRY: Dict[Tuple[str, str], Callable] = {}
+
+
+def register_serve_stage(stage: str, variant: str) -> Callable:
+    """Decorator: register an engine-stage function under
+    ``(stage, variant)`` (signatures in the module docstring)."""
+    if stage not in SERVE_STAGES:
+        raise ValueError(f"unknown serve stage {stage!r}; "
+                         f"choose from {SERVE_STAGES}")
+
+    def deco(fn):
+        _SERVE_REGISTRY[(stage, variant)] = fn
+        return fn
+    return deco
+
+
+def get_serve_stage(stage: str, variant: str) -> Callable:
+    try:
+        return _SERVE_REGISTRY[(stage, variant)]
+    except KeyError:
+        avail = serve_stage_variants(stage)
+        raise ValueError(
+            f"no {stage!r} stage variant {variant!r} registered; "
+            f"available: {avail}") from None
+
+
+def serve_stage_variants(stage: str):
+    """Registered variant names for an engine stage."""
+    return sorted(v for (s, v) in _SERVE_REGISTRY if s == stage)
+
+
+def resolve_serve_variants(spec: ServeSpec) -> Dict[str, Optional[str]]:
+    """Map a spec to the stage variants its engine uses.
+
+    ``rebalance`` is ``None`` when the spec disables it entirely."""
+    return {
+        "prefill": spec.prefill,
+        "insert": "slot",
+        "generate": spec.decode,
+        "rebalance": None if spec.rebalance == "never" else spec.rebalance,
+    }

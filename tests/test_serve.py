@@ -1,5 +1,5 @@
 """Serving-path tests: prefill/decode parity with full forward, ring
-buffers, engine with DLB rebalancing."""
+buffers, spec-driven slot engine with sharded KV migration."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +8,10 @@ import pytest
 from repro.configs import ARCH_IDS, get_smoke
 from repro.models import init_model
 from repro.models.model import hidden_fn
-from repro.serve import Request, ServeEngine, decode_step, prefill
+from repro.serve import (Request, ServeEngine, ServeSession, ServeSpec,
+                         bursty_trace, decode_step, get_serve_stage, prefill,
+                         resolve_serve_variants)
+from repro.serve.engine import _reset_deprecation_warning
 
 RNG = np.random.default_rng(0)
 B, S_PROMPT, N_NEW = 2, 32, 4
@@ -119,3 +122,179 @@ def test_engine_slot_reuse_matches_fresh_engine():
     fresh.run(max_steps=16)
     assert b2.done
     assert b.out == b2.out, (b.out, b2.out)
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec + stage registry
+# ---------------------------------------------------------------------------
+
+def test_serve_spec_validation_and_topology():
+    spec = ServeSpec(slots=5, groups=4)
+    assert spec.balance is not None and spec.balance.p == 4
+    assert spec.slots_per_group == 2 and spec.total_slots == 8
+    assert [spec.group_quota(g) for g in range(4)] == [2, 1, 1, 1]
+    assert list(spec.usable_slots(0)) == [0, 1]
+    assert list(spec.usable_slots(3)) == [6]
+    for bad in (dict(slots=0), dict(groups=0), dict(max_seq=1),
+                dict(rebalance_every=0), dict(prefill="nope"),
+                dict(decode="nope"), dict(rebalance="nope")):
+        with pytest.raises(ValueError):
+            ServeSpec(**bad)
+    from repro.core import BalanceSpec
+    with pytest.raises(ValueError):  # balance.p must equal groups
+        ServeSpec(groups=4, balance=BalanceSpec(p=2))
+
+
+def test_serve_spec_dict_roundtrip():
+    spec = ServeSpec(slots=6, groups=3, max_seq=128, rebalance_every=8,
+                     prefill="cheap", decode="replicated", rebalance="tags")
+    d = spec.to_dict()
+    assert d["balance"]["p"] == 3       # nested spec serialized as a dict
+    assert ServeSpec.from_dict(d) == spec
+    with pytest.raises(ValueError):
+        ServeSpec.from_dict({**d, "bogus": 1})
+
+
+def test_serve_stage_registry():
+    assert callable(get_serve_stage("prefill", "full"))
+    with pytest.raises(ValueError, match="cheap"):
+        get_serve_stage("prefill", "nope")
+    v = resolve_serve_variants(ServeSpec(rebalance="never"))
+    assert v["rebalance"] is None
+    assert v == {"prefill": "full", "insert": "slot", "generate": "sharded",
+                 "rebalance": None}
+
+
+# ---------------------------------------------------------------------------
+# Sharded slot engine + KV migration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_smoke("llama3_8b").replace(n_layers=2, d_model=64, n_heads=4,
+                                         n_kv_heads=2, head_dim=16, d_ff=128)
+    return cfg, init_model(cfg, jax.random.PRNGKey(0))
+
+
+def _kv_session(tiny_model, **kw):
+    cfg, params = tiny_model
+    spec = ServeSpec(**{**dict(slots=8, groups=4, max_seq=64,
+                               rebalance_every=1000, prefill="full",
+                               decode="sharded", rebalance="kv"), **kw})
+    return ServeSession(params, cfg, spec)
+
+
+def test_migration_parity_bit_identical(tiny_model):
+    """Forcing an inter-group KV-slot migration mid-decode must not
+    change a single output token -- the acceptance bar for 'the KV slot
+    physically moved and nothing was lost in transit'."""
+    prompt = RNG.integers(1, tiny_model[0].vocab, 8)
+
+    def run(migrate):
+        sess = _kv_session(tiny_model)
+        r = Request(rid=0, prompt=prompt, max_new=10)
+        sess.submit(r)
+        for i in range(16):
+            sess.step()
+            if migrate and i == 3 and not r.done:
+                stats = sess.migrate_request(0, dst_group=2)
+                assert stats["moved_kv_bytes"] == sess.kv_slot_bytes
+            if r.done:
+                break
+        assert r.done
+        return r
+
+    ref, mig = run(False), run(True)
+    assert mig.migrations == 1 and mig.group == 2
+    assert ref.out == mig.out, (ref.out, mig.out)
+
+
+def test_slot_reuse_after_migration(tiny_model):
+    """Both ends of a migration must be safely reusable: the vacated
+    source slot AND (after the mover finishes) the destination slot each
+    admit a new request that decodes exactly as on a fresh engine."""
+    cfg, _ = tiny_model
+    prompt_a = RNG.integers(1, cfg.vocab, 8)
+    prompt_b = RNG.integers(1, cfg.vocab, 8)
+
+    def fresh_out(prompt):
+        sess = _kv_session(tiny_model, slots=2, groups=2)
+        r = Request(rid=9, prompt=prompt, max_new=6)
+        sess.submit(r)
+        sess.run(max_steps=16)
+        assert r.done
+        return r.out
+
+    sess = _kv_session(tiny_model, slots=2, groups=2)   # spg = 1
+    a = Request(rid=0, prompt=prompt_a, max_new=12)
+    sess.submit(a)
+    sess.step()
+    assert a.slot == 0
+    sess.migrate_request(0, dst_group=1)                # a now in slot 1
+    assert a.slot == 1 and a.group == 1
+    # reuse the vacated SOURCE slot while the mover keeps decoding
+    b = Request(rid=1, prompt=prompt_b, max_new=6)
+    sess.submit(b)
+    sess.run(max_steps=32)
+    assert a.done and b.done and b.migrations == 0
+    assert b.out == fresh_out(prompt_b), "stale KV in vacated source slot"
+    # reuse the migration DESTINATION slot after the mover finished
+    c = Request(rid=2, prompt=prompt_b, max_new=6)
+    d = Request(rid=3, prompt=prompt_a, max_new=6)
+    sess.submit(c)
+    sess.submit(d)                                      # fills both groups
+    sess.run(max_steps=32)
+    assert c.done and d.done
+    assert {c.group, d.group} == {0, 1}
+    assert c.out == fresh_out(prompt_b)
+    assert d.out == fresh_out(prompt_a)
+
+
+def test_kv_rebalance_logs_moved_bytes(tiny_model):
+    """The engine's own rebalance trigger must physically migrate KV and
+    record moved_kv_bytes / retained next to TotalV / imbalance."""
+    cfg, _ = tiny_model
+    sess = _kv_session(tiny_model, rebalance_every=4)
+    reqs = [Request(rid=i, prompt=RNG.integers(1, cfg.vocab, 8),
+                    max_new=4 + 4 * (i % 3)) for i in range(10)]
+    for r in reqs:
+        sess.submit(r)
+    sess.run(max_steps=64)
+    assert all(r.done for r in reqs)
+    assert len(sess.migration_log) >= 1
+    for e in sess.migration_log:
+        assert {"step", "TotalV", "imbalance", "retained", "moved_kv_bytes",
+                "n_moved", "deferred"} <= set(e)
+        assert e["moved_kv_bytes"] == e["n_moved"] * sess.kv_slot_bytes
+    moved = sum(e["moved_kv_bytes"] for e in sess.migration_log)
+    migrated = sum(r.migrations for r in reqs)
+    assert migrated >= 1 and moved == migrated * sess.kv_slot_bytes
+
+
+def test_serve_engine_shim_warns_once(tiny_model):
+    cfg, params = tiny_model
+    _reset_deprecation_warning()
+    with pytest.warns(DeprecationWarning, match="ServeSpec"):
+        eng = ServeEngine(params, cfg, slots=2, n_groups=2, max_seq=32)
+    assert eng.spec.prefill == "cheap"
+    assert eng.spec.decode == "replicated"
+    assert eng.spec.rebalance == "tags"
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")        # second construction must be silent
+        ServeEngine(params, cfg, slots=2, n_groups=2, max_seq=32)
+    _reset_deprecation_warning()
+
+
+def test_bursty_trace_deterministic():
+    a = bursty_trace(40, seed=7, prompt_buckets=(4, 8, 16))
+    b = bursty_trace(40, seed=7, prompt_buckets=(4, 8, 16))
+    c = bursty_trace(40, seed=8, prompt_buckets=(4, 8, 16))
+    assert len(a) == 40
+    assert all(x.arrival == y.arrival and x.max_new == y.max_new
+               and (x.prompt == y.prompt).all() for x, y in zip(a, b))
+    assert any(x.arrival != y.arrival or len(x.prompt) != len(y.prompt)
+               for x, y in zip(a, c))
+    assert all(len(x.prompt) in (4, 8, 16) for x in a)
+    assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
+    assert all(1 <= x.max_new <= 48 for x in a)
