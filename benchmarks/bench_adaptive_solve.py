@@ -114,13 +114,17 @@ def main():
         if getattr(args, k) is None:
             setattr(args, k, v)
     methods = args.methods.split(",") if args.methods else None
-    rows, meta = run(max_steps=args.max_steps, max_tets=args.max_tets,
-                     p=args.p, backend=args.backend, methods=methods,
-                     vertex_layout=args.vertex_layout)
+    from repro import telemetry
+    (rows, meta), tele = telemetry.capture(
+        lambda: run(max_steps=args.max_steps, max_tets=args.max_tets,
+                    p=args.p, backend=args.backend, methods=methods,
+                    vertex_layout=args.vertex_layout))
     print("name,us_per_call,derived")
     for row in rows:
         print(f"{row[0]},{row[1]:.1f},{row[2]}")
     if args.json:
+        meta = dict(meta)
+        meta["telemetry"] = tele
         with open(args.json, "w") as f:
             json.dump(meta, f, indent=2, sort_keys=True)
         print(f"wrote {args.json}")

@@ -107,11 +107,15 @@ def main():
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a BENCH_dlb.json record to PATH")
     args = ap.parse_args()
-    rows, meta = run(backend=args.backend, oneD=args.oneD, quick=args.quick)
+    from repro import telemetry
+    (rows, meta), tele = telemetry.capture(
+        lambda: run(backend=args.backend, oneD=args.oneD, quick=args.quick))
     print("name,us_per_call,derived")
     for row in rows:
         print(f"{row[0]},{row[1]:.1f},{row[2]}")
     if args.json:
+        meta = dict(meta)
+        meta["telemetry"] = tele
         with open(args.json, "w") as f:
             json.dump(meta, f, indent=2, sort_keys=True)
         print(f"wrote {args.json}")

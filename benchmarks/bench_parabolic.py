@@ -75,12 +75,16 @@ def main():
                     help="write a machine-readable per-step record to PATH")
     args = ap.parse_args()
     methods = args.methods.split(",") if args.methods else None
-    rows, meta = run(n_steps=args.n_steps, max_tets=args.max_tets,
-                     p=args.p, backend=args.backend, methods=methods)
+    from repro import telemetry
+    (rows, meta), tele = telemetry.capture(
+        lambda: run(n_steps=args.n_steps, max_tets=args.max_tets,
+                    p=args.p, backend=args.backend, methods=methods))
     print("name,us_per_call,derived")
     for row in rows:
         print(f"{row[0]},{row[1]:.1f},{row[2]}")
     if args.json:
+        meta = dict(meta)
+        meta["telemetry"] = tele
         with open(args.json, "w") as f:
             json.dump(meta, f, indent=2, sort_keys=True)
         print(f"wrote {args.json}")

@@ -194,11 +194,14 @@ def main():
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a BENCH_partition.json record to PATH")
     args = ap.parse_args()
-    rows, record = run(quick=args.quick)
+    from repro import telemetry
+    (rows, record), tele = telemetry.capture(lambda: run(quick=args.quick))
     print("name,us_per_call,derived")
     for row in rows:
         print(f"{row[0]},{row[1]:.1f},{row[2]}")
     if args.json:
+        record = dict(record)
+        record["telemetry"] = tele
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2, sort_keys=True)
         print(f"wrote {args.json}")

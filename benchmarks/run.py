@@ -20,6 +20,10 @@ Each module maps to one paper table/figure (DESIGN.md section 8):
 ``DIR/BENCH_<suite>.json`` (suites without a record are skipped) so the
 perf trajectory is comparable across PRs; ``benchmarks/baselines/``
 holds the committed CPU ``--quick`` baseline.
+
+Every suite runs under a fresh ``repro.telemetry`` tracer; the counter
+totals (cut, migration volume, halo/psum/KV bytes) land in each record
+under the ``"telemetry"`` key.
 """
 import argparse
 import json
@@ -36,6 +40,8 @@ def main() -> None:
                     help="aggregate per-suite records into "
                          "DIR/BENCH_<suite>.json")
     args = ap.parse_args()
+
+    from repro import telemetry
 
     from . import (bench_adaptive_solve, bench_aspect_ratio, bench_beyond,
                    bench_churn, bench_dlb, bench_parabolic, bench_partition,
@@ -65,11 +71,15 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         try:
-            rows, record = fn()
+            # one fresh tracer per suite: counter totals (cut, migration
+            # volume, halo/psum/KV bytes) ride along in the record
+            (rows, record), tele = telemetry.capture(fn)
             for row in rows:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
             sys.stdout.flush()
             if args.json and record is not None:
+                record = dict(record)
+                record["telemetry"] = tele
                 path = os.path.join(args.json, f"BENCH_{name}.json")
                 with open(path, "w") as f:
                     json.dump(record, f, indent=2, sort_keys=True)

@@ -20,34 +20,30 @@ New code should import from ``repro.core`` directly:
 """
 from __future__ import annotations
 
-import time
-import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional
 
 import jax
 import numpy as np
 
+from .. import deprecation
+from ..telemetry import stopwatch
 from .spec import Balancer, BalanceSpec, compute_cut
 
-_DEPRECATION_WARNED = False
+_DEPRECATION_KEY = "DynamicLoadBalancer"
 
 
 def _warn_deprecated_once() -> None:
     """Emit the legacy-API DeprecationWarning once per process."""
-    global _DEPRECATION_WARNED
-    if not _DEPRECATION_WARNED:
-        _DEPRECATION_WARNED = True
-        warnings.warn(
-            "DynamicLoadBalancer is deprecated; build a BalanceSpec and "
-            "use repro.core.Balancer.from_spec(spec) instead",
-            DeprecationWarning, stacklevel=3)
+    deprecation.warn_once(
+        _DEPRECATION_KEY,
+        "DynamicLoadBalancer is deprecated; build a BalanceSpec and "
+        "use repro.core.Balancer.from_spec(spec) instead")
 
 
 def _reset_deprecation_warning() -> None:
     """Testing hook: allow the once-per-process warning to fire again."""
-    global _DEPRECATION_WARNED
-    _DEPRECATION_WARNED = False
+    deprecation.reset(_DEPRECATION_KEY)
 
 
 @dataclass
@@ -123,12 +119,12 @@ class DynamicLoadBalancer:
                 old_parts: Optional[jax.Array] = None,
                 adjacency: Optional[jax.Array] = None) -> LegacyBalanceResult:
         bal = self._get()
-        t0 = time.perf_counter()
-        res = bal.balance(weights, coords=coords, old_parts=old_parts)
-        jax.block_until_ready(res.parts)
-        t = time.perf_counter() - t0
+        with stopwatch("legacy/balance", backend=self.spec.backend) as sw:
+            res = bal.balance(weights, coords=coords, old_parts=old_parts)
+            sw.block_on(res.parts)
         info = legacy_info(self.spec, res, adjacency=adjacency,
-                           has_old=old_parts is not None, t_balance=t)
+                           has_old=old_parts is not None,
+                           t_balance=sw.dur_s)
         if self.spec.backend == "sharded":
             info["capacity"] = bal.capacity_for(int(weights.shape[0]))
         return LegacyBalanceResult(res.parts, info)

@@ -34,13 +34,13 @@ skew part-0 statistics.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, ClassVar, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import telemetry
 from . import metrics as _metrics
 from . import partition1d as _p1d
 from . import remap as _remap
@@ -617,29 +617,59 @@ class Balancer:
         keys.  ``warm_splitters`` seeds the k-section boxes; when
         ``spec.warm_start`` is set and it is omitted, the previous
         call's splitters are threaded automatically."""
-        w, xyz, old, ks, n = self._pad(weights, coords, old_parts, keys)
-        warm = warm_splitters
-        if warm is None and self.spec.warm_start:
-            warm = self._last_splitters
-        if self._variants["partition1d"] not in ("ksection",
-                                                 "ksection_pallas"):
-            warm = None
-        if warm is not None:
-            warm = jnp.asarray(warm, jnp.float32)
-        sig = (old is not None, ks is not None, warm is not None)
-        if sig not in self._jitted:
-            self._jitted[sig] = jax.jit(self.balance_fn)
-        fn = self._jitted[sig]
-        if self.spec.backend == "sharded":
-            # bookkeeping: jax.jit retraces per capacity bucket, so each
-            # distinct (C, has_old) key is one compiled pipeline
-            self._compiled[(self.capacity_for(n), sig[0])] = fn
-        res = fn(w, xyz, old, ks, warm)
-        if self.spec.warm_start and res.splitters is not None:
-            self._last_splitters = res.splitters
-        if int(res.parts.shape[0]) != n:
-            res = dataclasses.replace(res, parts=res.parts[:n])
+        tr = telemetry.get_tracer()
+        with tr.span("balance", block=True, backend=self.spec.backend,
+                     method=self.spec.method, oneD=self.spec.oneD) as sp:
+            w, xyz, old, ks, n = self._pad(weights, coords, old_parts, keys)
+            warm = warm_splitters
+            if warm is None and self.spec.warm_start:
+                warm = self._last_splitters
+            if self._variants["partition1d"] not in ("ksection",
+                                                     "ksection_pallas"):
+                warm = None
+            if warm is not None:
+                warm = jnp.asarray(warm, jnp.float32)
+            sig = (old is not None, ks is not None, warm is not None)
+            if sig not in self._jitted:
+                self._jitted[sig] = jax.jit(self.balance_fn)
+            fn = self._jitted[sig]
+            if self.spec.backend == "sharded":
+                # bookkeeping: jax.jit retraces per capacity bucket, so
+                # each distinct (C, has_old) key is one compiled pipeline
+                self._compiled[(self.capacity_for(n), sig[0])] = fn
+            res = fn(w, xyz, old, ks, warm)
+            if self.spec.warm_start and res.splitters is not None:
+                self._last_splitters = res.splitters
+            if int(res.parts.shape[0]) != n:
+                res = dataclasses.replace(res, parts=res.parts[:n])
+            sp.block_on(res.parts)
+        if tr.enabled:
+            self._publish_quality(tr, res)
         return res
+
+    def _publish_quality(self, tr, res: BalanceResult) -> None:
+        """Publish the paper's partition-quality metrics for one call.
+
+        This is the single publication site for the balancer (host and
+        sharded pipelines are bit-exact, so totals match across
+        backends).  ``total_v``/``max_v``/``retained`` are zero when no
+        ``old_parts`` were given, so unconditional publication is safe.
+        """
+        m = tr.metrics
+        m.gauge("imbalance",
+                help="max part weight / mean part weight").set(
+                    float(res.imbalance))
+        m.counter("repartitions",
+                  help="balance() calls").inc()
+        m.counter("migration_total_v", unit="weight",
+                  help="paper TotalV: weight moved between parts").inc(
+                      float(res.total_v))
+        m.gauge("migration_max_v", unit="weight",
+                help="paper MaxV: heaviest single-part inflow").set(
+                    float(res.max_v))
+        m.counter("migration_retained", unit="weight",
+                  help="weight that stayed on its part").inc(
+                      float(res.retained))
 
     def balance_timed(self, weights, *, coords=None, old_parts=None,
                       keys=None, warm_splitters=None
@@ -647,12 +677,15 @@ class Balancer:
         """``balance`` plus a blocking wall-clock measurement.
 
         The timing wrapper is the ONLY place the pipeline touches the
-        host clock; the pipeline itself stays pure/jittable."""
-        t0 = time.perf_counter()
-        res = self.balance(weights, coords=coords, old_parts=old_parts,
-                           keys=keys, warm_splitters=warm_splitters)
-        jax.block_until_ready(res.parts)
-        return res, {"t_balance": time.perf_counter() - t0}
+        host clock; the pipeline itself stays pure/jittable.  Routed
+        through ``telemetry.stopwatch`` so the clock stops only after
+        ``res.parts`` is device-ready, with or without a tracer."""
+        with telemetry.stopwatch("balance_timed",
+                                 backend=self.spec.backend) as sw:
+            res = self.balance(weights, coords=coords, old_parts=old_parts,
+                               keys=keys, warm_splitters=warm_splitters)
+            sw.block_on(res.parts)
+        return res, {"t_balance": sw.dur_s}
 
 
 def compute_cut(parts, adjacency):

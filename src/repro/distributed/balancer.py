@@ -16,11 +16,11 @@ attribute).  New code should use::
 """
 from __future__ import annotations
 
-import time
 from typing import Optional
 
 import jax
 
+from ..telemetry import stopwatch
 from ..core.balancer import (LegacyBalanceResult, _warn_deprecated_once,
                              legacy_info)
 from ..core.spec import Balancer, BalanceSpec, SFC_METHODS
@@ -78,12 +78,11 @@ class DistributedBalancer:
         """
         if coords is None:
             raise ValueError("sharded balance requires coords (SFC methods)")
-        t0 = time.perf_counter()
-        res = self._inner.balance(weights, coords=coords,
-                                  old_parts=old_parts)
-        jax.block_until_ready(res.parts)
-        t = time.perf_counter() - t0
+        with stopwatch("legacy/balance", backend="sharded") as sw:
+            res = self._inner.balance(weights, coords=coords,
+                                      old_parts=old_parts)
+            sw.block_on(res.parts)
         info = legacy_info(self.spec, res, has_old=old_parts is not None,
-                           t_balance=t)
+                           t_balance=sw.dur_s)
         info["capacity"] = self._inner.capacity_for(int(weights.shape[0]))
         return LegacyBalanceResult(res.parts, info)

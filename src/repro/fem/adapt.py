@@ -53,9 +53,8 @@ deprecated thin wrappers that build a spec and delegate to the session.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-import time
-import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, ClassVar, Dict, List, Mapping, Optional, Tuple
 
@@ -63,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import deprecation, telemetry
 from ..core import Balancer, BalanceSpec, imbalance
 from ..core.metrics import cut_links
 from ..core.sfc import refresh_key_cache
@@ -435,7 +435,7 @@ def _pack_owned(session: "AdaptiveSession", state: SessionState):
     per-matvec communication model, and invalidate the cached operators.
     The single packing recipe -- both the balance stage and the solve-path
     staleness repack go through here."""
-    from .halo import build_halo_plan, update_halo_plan
+    from .halo import build_halo_plan, publish_wire_model, update_halo_plan
     from .parallel import shard_elements_on_device
     el = _ensure_elements(state)
     mesh = state.mesh
@@ -463,6 +463,9 @@ def _pack_owned(session: "AdaptiveSession", state: SessionState):
                               jnp.asarray(mesh.face_adjacency())))
     state.comm_psum_bytes = plan.psum_bytes()
     state.comm_halo_bytes = plan.halo_bytes()
+    tr = telemetry.get_tracer()
+    if tr.enabled:
+        publish_wire_model(plan, tr.metrics)
 
 
 def _ensure_owned_packing(session: "AdaptiveSession", state: SessionState):
@@ -734,6 +737,10 @@ def _balance_sharded(session: "AdaptiveSession", state: SessionState):
 # AdaptiveSession
 # ---------------------------------------------------------------------------
 
+@contextlib.contextmanager
+def _null_scope():
+    yield
+
 class AdaptiveSession:
     """Resolve an ``AdaptSpec`` into an executable adaptive loop.
 
@@ -751,7 +758,8 @@ class AdaptiveSession:
     def __init__(self, spec: AdaptSpec, *, mesh: Optional[Mesh] = None,
                  devices=None, verbose: bool = False,
                  on_step: Optional[Callable] = None,
-                 on_stage: Optional[Callable] = None):
+                 on_stage: Optional[Callable] = None,
+                 tracer: Optional["telemetry.Tracer"] = None):
         self.spec = spec
         self.setup = get_problem(spec.problem)
         if self.setup.kind == "parabolic" and spec.stationary:
@@ -775,6 +783,10 @@ class AdaptiveSession:
                         for s, v in self.variants.items() if v is not None}
         self.verbose = verbose
         self.on_step, self.on_stage = on_step, on_stage
+        # explicit per-session tracer: run() installs it for the loop's
+        # duration; None follows whatever telemetry.tracing() scope is
+        # active at run() time
+        self.tracer = tracer
         self._mesh = mesh
         self._devices = devices
         self._device_mesh = None
@@ -795,10 +807,22 @@ class AdaptiveSession:
     # -- timed stage dispatch ----------------------------------------------
     def _run_stage(self, stage: str, state: SessionState,
                    bucket: Optional[str] = None) -> None:
+        """Run one registered stage under an always-on stopwatch span.
+
+        The span blocks on the stage's device outputs before the clock
+        stops (JAX dispatch is async: without the sync the timing would
+        cover enqueueing, not the work), feeds ``state.timings`` /
+        ``StepStats``, and lands in the active tracer when telemetry is
+        on.  ``on_stage`` stays a thin adapter over the span."""
         fn = self._stages[stage]
-        t0 = time.perf_counter()
-        fn(self, state)
-        dt = time.perf_counter() - t0
+        with telemetry.stopwatch(f"adapt/{stage}",
+                                 variant=self.variants[stage],
+                                 step=state.step) as sw:
+            fn(self, state)
+            sw.block_on([x for x in (state.u, state.eta,
+                                     state.balance_result)
+                         if x is not None])
+        dt = sw.dur_s
         key = bucket or stage
         state.timings[key] = state.timings.get(key, 0.0) + dt
         if self.on_stage is not None:
@@ -841,15 +865,32 @@ class AdaptiveSession:
             state.u = np.asarray(self.problem.exact(jnp.asarray(mesh.verts),
                                                     0.0))
         n_iters = spec.max_steps if stationary else spec.n_steps
+        scope = (telemetry.tracing(self.tracer) if self.tracer is not None
+                 else _null_scope())
+        with scope:
+            self._run_steps(state, result, stationary, n_iters)
+        if state.u is not None:
+            result.u = jnp.asarray(state.u)
+        result.mesh = state.mesh
+        result.sharded = state.sharded
+        result.halo = state.halo
+        return result
+
+    def _run_steps(self, state: SessionState, result: AdaptiveResult,
+                   stationary: bool, n_iters: int) -> None:
+        tr = telemetry.get_tracer()
         for step in range(n_iters):
             state.step = step
             state.timings = {}
-            if stationary:
-                self._step_stationary(state)
-            else:
-                self._step_timedep(state)
+            with tr.span("adapt/step", step=step) as sp:
+                if stationary:
+                    self._step_stationary(state)
+                else:
+                    self._step_timedep(state)
+                sp.set(n_tets=state.mesh.n_tets)
             stats = self._emit_stats(state)
             result.stats.append(stats)
+            tr.tick(step)
             if state.repartitioned:
                 result.n_repartitions += 1
             if self.on_step is not None:
@@ -863,14 +904,24 @@ class AdaptiveSession:
                       f"bal={stats.t_balance:.3f}s")
             if stationary and not state.grew:
                 break
-        if state.u is not None:
-            result.u = jnp.asarray(state.u)
-        result.mesh = state.mesh
-        result.sharded = state.sharded
-        result.halo = state.halo
-        return result
 
     def _emit_stats(self, state: SessionState) -> StepStats:
+        tr = telemetry.get_tracer()
+        if tr.enabled:
+            if state.cut is None:
+                # only the owned-sharded packing computes the cut on its
+                # own; under tracing, pay for it on every backend so the
+                # quality counters are backend-independent
+                parts = state.mesh.leaf_payload.get("parts")
+                if parts is not None and len(parts) == state.mesh.n_tets:
+                    state.cut = int(cut_links(
+                        jnp.asarray(parts),
+                        jnp.asarray(state.mesh.face_adjacency())))
+            if state.cut is not None:
+                tr.metrics.gauge(
+                    "cut", unit="links",
+                    help="element-adjacency links crossing parts "
+                         "(paper surface index)").set(int(state.cut))
         eta2 = np.asarray(state.eta, np.float64) ** 2
         tm = state.timings
         return StepStats(
@@ -895,24 +946,22 @@ class AdaptiveSession:
 # Deprecated driver wrappers
 # ---------------------------------------------------------------------------
 
-_DEPRECATION_WARNED = False
+# one shared key for both legacy drivers: the old machinery warned once
+# per process across the pair, not once per driver
+_DEPRECATION_KEY = "fem.adapt.legacy_drivers"
 
 
 def _warn_deprecated_once(name: str) -> None:
     """Emit the legacy-driver DeprecationWarning once per process."""
-    global _DEPRECATION_WARNED
-    if not _DEPRECATION_WARNED:
-        _DEPRECATION_WARNED = True
-        warnings.warn(
-            f"{name} is deprecated; build an AdaptSpec and use "
-            "repro.fem.AdaptiveSession(spec).run(mesh) instead",
-            DeprecationWarning, stacklevel=3)
+    deprecation.warn_once(
+        _DEPRECATION_KEY,
+        f"{name} is deprecated; build an AdaptSpec and use "
+        "repro.fem.AdaptiveSession(spec).run(mesh) instead")
 
 
 def _reset_deprecation_warning() -> None:
     """Testing hook: allow the once-per-process warning to fire again."""
-    global _DEPRECATION_WARNED
-    _DEPRECATION_WARNED = False
+    deprecation.reset(_DEPRECATION_KEY)
 
 
 def solve_helmholtz_adaptive(mesh: Mesh, *, p: int = 16,

@@ -129,6 +129,23 @@ jax.tree_util.register_pytree_node(
 )
 
 
+def publish_wire_model(plan: HaloPlan, metrics, *, itemsize: int = 4) -> None:
+    """Publish the plan's per-matvec wire model to a telemetry registry.
+
+    One gauge per layout: what a single reduction puts on the wire under
+    the halo exchange (cut-proportional) vs the replicated psum it
+    replaces (mesh-proportional).  ``metrics`` is a
+    ``repro.telemetry.MetricsRegistry`` (or the null registry)."""
+    metrics.gauge(
+        "comm_halo_bytes", unit="bytes",
+        help="one halo_reduce, both all_to_all legs "
+             "(cut-proportional)").set(int(plan.halo_bytes(itemsize)))
+    metrics.gauge(
+        "comm_psum_bytes", unit="bytes",
+        help="the replicated-path psum this plan replaces "
+             "(mesh-proportional)").set(int(plan.psum_bytes(itemsize)))
+
+
 def build_halo_plan(tets, parts, n_verts: int, p: int) -> HaloPlan:
     """Derive the owned-vertex sharding from a partition + connectivity.
 

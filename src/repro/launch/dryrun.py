@@ -43,6 +43,7 @@ from ..distributed.sharding import (Boxed, spec_for,         # noqa: E402
                                     use_rules)
 from ..models import ModelConfig, init_model, loss_fn        # noqa: E402
 from ..serve import decode as serve_decode                   # noqa: E402
+from ..telemetry import stopwatch                            # noqa: E402
 from ..train import (AdamWConfig, adamw_update,              # noqa: E402
                      init_opt_state, zero_pspec)
 from .hlo_analysis import collective_bytes                   # noqa: E402
@@ -317,29 +318,33 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     # descend into shard_map call bodies, so the mathematical step must
     # take the dense code paths (same arithmetic, fully visible).
     if flops_phase and not multi_pod:
-        t0 = time.perf_counter()
-        fn, args, mesh, rules, cfg = build_cell(
-            arch, shape_name, multi_pod=multi_pod, unroll=True,
-            cfg_override=cfg_override, rules_override=rules_override)
-        with use_rules(rules, None), mesh:
-            low = fn.lower(*args)
-            ca = low.cost_analysis()
+        with stopwatch("dryrun/lower_unrolled", block=False,
+                       arch=arch, shape=shape_name) as sw:
+            fn, args, mesh, rules, cfg = build_cell(
+                arch, shape_name, multi_pod=multi_pod, unroll=True,
+                cfg_override=cfg_override, rules_override=rules_override)
+            with use_rules(rules, None), mesh:
+                low = fn.lower(*args)
+                ca = low.cost_analysis()
         rec["flops_global"] = float(ca.get("flops", -1.0))
         rec["bytes_global_unfused"] = float(ca.get("bytes accessed", -1.0))
-        rec["t_lower_unrolled_s"] = round(time.perf_counter() - t0, 2)
+        rec["t_lower_unrolled_s"] = round(sw.dur_s, 2)
         del low, fn
 
     # Phase B: production compile (scanned) -> memory + collectives
-    t0 = time.perf_counter()
-    fn, args, mesh, rules, cfg = build_cell(
-        arch, shape_name, multi_pod=multi_pod, unroll=False,
-        cfg_override=cfg_override, rules_override=rules_override)
+    with stopwatch("dryrun/lower", block=False,
+                   arch=arch, shape=shape_name) as sw_lower:
+        fn, args, mesh, rules, cfg = build_cell(
+            arch, shape_name, multi_pod=multi_pod, unroll=False,
+            cfg_override=cfg_override, rules_override=rules_override)
+        with use_rules(rules, mesh), mesh:
+            low = fn.lower(*args)
+    rec["t_lower_s"] = round(sw_lower.dur_s, 2)
     with use_rules(rules, mesh), mesh:
-        low = fn.lower(*args)
-        rec["t_lower_s"] = round(time.perf_counter() - t0, 2)
-        t0 = time.perf_counter()
-        compiled = low.compile()
-        rec["t_compile_s"] = round(time.perf_counter() - t0, 2)
+        with stopwatch("dryrun/compile", block=False,
+                       arch=arch, shape=shape_name) as sw_compile:
+            compiled = low.compile()
+    rec["t_compile_s"] = round(sw_compile.dur_s, 2)
     mem = compiled.memory_analysis()
     rec["memory_per_device"] = {
         "argument_bytes": getattr(mem, "argument_size_in_bytes", None),

@@ -32,13 +32,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import deprecation, telemetry
 from ..core import Balancer, BalanceSpec
 from ..models import ModelConfig
 from .decode import (decode_step, init_decode_state, init_serve_state,
@@ -171,8 +171,11 @@ class ServeSession:
     """
 
     def __init__(self, params, cfg: ModelConfig, spec: ServeSpec, *,
-                 devices=None):
+                 devices=None, tracer=None):
         self.params, self.cfg, self.spec = params, cfg, spec
+        # explicit per-session tracer; None follows the active
+        # telemetry.tracing() scope at call time
+        self.tracer = tracer
         self._variants = resolve_serve_variants(spec)
         total = spec.total_slots
         if spec.prefill == "full":
@@ -217,6 +220,10 @@ class ServeSession:
             if self._variants["rebalance"] is not None else None)
 
     # -- bookkeeping helpers -------------------------------------------------
+    def _tr(self):
+        return self.tracer if self.tracer is not None \
+            else telemetry.get_tracer()
+
     @property
     def spg(self) -> int:
         return self.spec.slots_per_group
@@ -247,8 +254,11 @@ class ServeSession:
                 return
             _, g, slot = min(cands)
             req = self.queue.pop(0)
-            seed_tok, row, first_tok = self._prefill(self, req)
-            self._insert(self, req, slot, seed_tok, row)
+            with self._tr().span("serve/prefill", block=True, rid=req.rid,
+                                 variant=self._variants["prefill"]) as sp:
+                seed_tok, row, first_tok = self._prefill(self, req)
+                self._insert(self, req, slot, seed_tok, row)
+                sp.block_on([x for x in (seed_tok, row) if x is not None])
             req.slot, req.group = slot, g
             if first_tok is not None:       # full prefill emits token 1
                 now = time.perf_counter()
@@ -343,9 +353,12 @@ class ServeSession:
 
     # -- the engine step -----------------------------------------------------
     def step(self) -> None:
+        tr = self._tr()
         self._admit()
-        logits = self._generate(self)
-        next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        with tr.span("serve/decode", block=True, step=self.step_count,
+                     variant=self._variants["generate"]) as sp:
+            logits = self._generate(self)
+            next_tok = sp.block_on(jnp.argmax(logits[:, -1], axis=-1))
         self.tokens = next_tok[:, None].astype(jnp.int32)
         toks = np.asarray(next_tok)
         now = time.perf_counter()
@@ -363,9 +376,18 @@ class ServeSession:
         self.step_count += 1
         if (self._rebalance is not None
                 and self.step_count % self.spec.rebalance_every == 0):
-            entry = self._rebalance(self)
+            with tr.span("serve/rebalance", step=self.step_count,
+                         variant=self._variants["rebalance"]):
+                entry = self._rebalance(self)
             if entry is not None:
                 self.migration_log.append(entry)
+                if tr.enabled:
+                    tr.metrics.counter(
+                        "moved_kv_bytes", unit="bytes",
+                        help="KV-cache bytes physically migrated between "
+                             "groups by rebalances").inc(
+                                 int(entry.get("moved_kv_bytes", 0)))
+                    tr.tick(self.step_count)
 
     def run(self, max_steps: int = 512) -> None:
         while (any(r is not None for r in self.active) or self.queue) \
@@ -378,24 +400,21 @@ class ServeSession:
 # Deprecated shim: the old ServeEngine constructor
 # ---------------------------------------------------------------------------
 
-_DEPRECATION_WARNED = False
+_DEPRECATION_KEY = "ServeEngine"
 
 
 def _warn_deprecated_once() -> None:
     """Emit the legacy-API DeprecationWarning once per process."""
-    global _DEPRECATION_WARNED
-    if not _DEPRECATION_WARNED:
-        _DEPRECATION_WARNED = True
-        warnings.warn(
-            "ServeEngine(slots=..., n_groups=...) is deprecated; build a "
-            "repro.serve.ServeSpec and use ServeSession(params, cfg, spec) "
-            "instead", DeprecationWarning, stacklevel=3)
+    deprecation.warn_once(
+        _DEPRECATION_KEY,
+        "ServeEngine(slots=..., n_groups=...) is deprecated; build a "
+        "repro.serve.ServeSpec and use ServeSession(params, cfg, spec) "
+        "instead")
 
 
 def _reset_deprecation_warning() -> None:
     """Testing hook: allow the once-per-process warning to fire again."""
-    global _DEPRECATION_WARNED
-    _DEPRECATION_WARNED = False
+    deprecation.reset(_DEPRECATION_KEY)
 
 
 class ServeEngine(ServeSession):

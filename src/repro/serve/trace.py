@@ -110,18 +110,30 @@ def run_trace(session: ServeSession, trace: Sequence[TraceRequest], *,
         max_steps = 64 * len(trace) + 256
     pending = sorted(trace, key=lambda r: (r.arrival, r.rid))
     requests: List[Request] = []
+    tracer = session._tr()
+    if tracer.enabled:
+        # register up front so the counter exists (at 0) even when no
+        # rebalance fires within the trace
+        tracer.metrics.counter(
+            "moved_kv_bytes", unit="bytes",
+            help="KV-cache bytes physically migrated between groups by "
+                 "rebalances")
     i, t0 = 0, time.perf_counter()
-    for _ in range(max_steps):
-        while i < len(pending) and pending[i].arrival <= session.step_count:
-            tr = pending[i]
-            req = Request(rid=tr.rid, prompt=tr.prompt, max_new=tr.max_new)
-            requests.append(req)
-            session.submit(req)
-            i += 1
-        session.step()
-        if (i == len(pending) and not session.queue
-                and all(r is None for r in session.active)):
-            break
+    with tracer.span("serve/run_trace", requests=len(trace)) as sp:
+        for _ in range(max_steps):
+            while (i < len(pending)
+                   and pending[i].arrival <= session.step_count):
+                tr = pending[i]
+                req = Request(rid=tr.rid, prompt=tr.prompt,
+                              max_new=tr.max_new)
+                requests.append(req)
+                session.submit(req)
+                i += 1
+            session.step()
+            if (i == len(pending) and not session.queue
+                    and all(r is None for r in session.active)):
+                break
+        sp.set(steps=session.step_count)
     wall = time.perf_counter() - t0
 
     done = [r for r in requests if r.done]

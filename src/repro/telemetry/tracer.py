@@ -1,0 +1,283 @@
+"""Span tracer: nestable timed regions with async-dispatch-safe clocks.
+
+JAX dispatch is asynchronous: ``fn(x)`` returns as soon as the work is
+*enqueued*, so a naive ``perf_counter`` pair around a jitted call times
+the dispatch, not the device work.  Every span here therefore carries an
+explicit ``block`` option: outputs designated via ``Span.block_on`` (or
+the return value, for the ``@traced`` decorator) are passed through
+``jax.block_until_ready`` *before* the clock stops, so a span's duration
+covers the device work it launched.
+
+Two entry points with different off-switch semantics:
+
+* ``Tracer.span`` / module-level ``repro.telemetry.span`` -- records a
+  ``SpanEvent`` into the active tracer.  When the active tracer is the
+  ``NullTracer`` (telemetry off) this returns a shared no-op handle:
+  no clock reads, no blocking, no allocation -- instrumented hot paths
+  cost nothing.
+* ``stopwatch`` -- for call sites whose *callers* consume the duration
+  (``Balancer.balance_timed``, the adaptive session's ``StepStats``
+  timings): always times and always honors ``block``, recording into
+  the tracer only when one is active.  Timing correctness is therefore
+  independent of whether telemetry is on.
+
+Single-threaded by design (the control planes it instruments are); the
+span stack is per-tracer, depth/nesting come from ``with`` discipline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from .metrics import MetricsRegistry, NullMetricsRegistry
+
+__all__ = ["NullTracer", "Span", "SpanEvent", "Tracer", "get_tracer",
+           "set_tracer", "span", "stopwatch", "traced", "tracing"]
+
+
+@dataclasses.dataclass
+class SpanEvent:
+    """One completed span, times in microseconds since the tracer epoch."""
+    name: str
+    ts_us: float
+    dur_us: float
+    depth: int
+    attrs: Dict[str, Any]
+
+
+class Span:
+    """Context-manager handle of one timed region.
+
+    ``block_on(x)`` designates ``x`` (any pytree) as an output the span
+    must wait for; on exit, designated outputs go through
+    ``jax.block_until_ready`` before the clock stops iff the span was
+    created with ``block=True``.  ``set(**attrs)`` attaches attributes;
+    ``dur_s`` is available after exit.
+    """
+
+    __slots__ = ("_tracer", "name", "attrs", "_block", "_outs",
+                 "_t0", "_t1", "depth")
+
+    def __init__(self, tracer: Optional["Tracer"], name: str, block: bool,
+                 attrs: Dict[str, Any]):
+        self._tracer = tracer
+        self.name = name
+        self.attrs = attrs
+        self._block = block
+        self._outs: List[Any] = []
+        self._t0 = self._t1 = 0.0
+        self.depth = 0
+
+    def block_on(self, value):
+        """Designate ``value`` as an output to sync on before the clock
+        stops (returns it unchanged, so it composes inline)."""
+        self._outs.append(value)
+        return value
+
+    def set(self, **attrs) -> "Span":
+        self.attrs.update(attrs)
+        return self
+
+    def __enter__(self) -> "Span":
+        if self._tracer is not None:
+            self.depth = self._tracer._enter(self)
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if self._block and self._outs:
+            # the whole point: device work launched inside the span is
+            # billed to the span, not to whoever syncs next
+            jax.block_until_ready(self._outs)
+        self._t1 = time.perf_counter()
+        if self._tracer is not None:
+            self._tracer._exit(self)
+        return False
+
+    @property
+    def dur_s(self) -> float:
+        """Blocking wall-clock duration in seconds (after exit)."""
+        return self._t1 - self._t0
+
+
+class _NullSpan:
+    """Shared no-op span handle: the telemetry-off fast path."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        return False
+
+    def block_on(self, value):
+        return value
+
+    def set(self, **attrs) -> "_NullSpan":
+        return self
+
+    @property
+    def dur_s(self) -> float:
+        return 0.0
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """Telemetry off: same surface as ``Tracer``, does nothing.
+
+    ``span`` hands back one shared handle (no allocation, no clock read,
+    no blocking); ``metrics`` swallows updates.  This is the process
+    default so instrumented code never pays for unused telemetry.
+    """
+
+    enabled = False
+
+    def __init__(self):
+        self.metrics = NullMetricsRegistry()
+        self.events: List[SpanEvent] = []
+
+    def span(self, name: str, *, block: bool = False, **attrs) -> _NullSpan:
+        return _NULL_SPAN
+
+    def tick(self, step: int, **attrs) -> None:
+        pass
+
+    def traced(self, name: Optional[str] = None, *, block: bool = False,
+               **attrs) -> Callable:
+        return traced(name, block=block, **attrs)
+
+
+class Tracer:
+    """Collects ``SpanEvent``s and a ``MetricsRegistry`` for one run.
+
+    Times are relative to the tracer's construction (``perf_counter``
+    epoch), in microseconds -- the unit Chrome-trace wants.  Spans nest
+    via the ``with`` stack; ``tick(step)`` snapshots every registered
+    counter/gauge with a timestamp so exporters can emit per-step
+    counter tracks.
+    """
+
+    enabled = True
+
+    def __init__(self):
+        self._epoch = time.perf_counter()
+        self.events: List[SpanEvent] = []
+        self._stack: List[Span] = []
+        self.metrics = MetricsRegistry()
+
+    # -- span lifecycle (driven by Span.__enter__/__exit__) -----------------
+    def _enter(self, sp: Span) -> int:
+        depth = len(self._stack)
+        self._stack.append(sp)
+        return depth
+
+    def _exit(self, sp: Span) -> None:
+        if self._stack and self._stack[-1] is sp:
+            self._stack.pop()
+        self.events.append(SpanEvent(
+            name=sp.name,
+            ts_us=(sp._t0 - self._epoch) * 1e6,
+            dur_us=sp.dur_s * 1e6,
+            depth=sp.depth,
+            attrs=sp.attrs))
+
+    # -- public API ---------------------------------------------------------
+    def span(self, name: str, *, block: bool = False, **attrs) -> Span:
+        return Span(self, name, block, attrs)
+
+    def now_us(self) -> float:
+        return (time.perf_counter() - self._epoch) * 1e6
+
+    def tick(self, step: int, **attrs) -> None:
+        """Per-step counter snapshot (timestamped for counter tracks)."""
+        self.metrics.tick(step, ts_us=self.now_us(), **attrs)
+
+    def traced(self, name: Optional[str] = None, *, block: bool = False,
+               **attrs) -> Callable:
+        """Decorator twin of ``span`` bound to THIS tracer."""
+        return traced(name, block=block, tracer=self, **attrs)
+
+
+# ---------------------------------------------------------------------------
+# Active-tracer plumbing
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Any = NullTracer()
+
+
+def get_tracer():
+    """The process-wide active tracer (a ``NullTracer`` unless installed)."""
+    return _ACTIVE
+
+
+def set_tracer(tracer):
+    """Install ``tracer`` as the active one; returns the previous."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = tracer if tracer is not None else NullTracer()
+    return prev
+
+
+class tracing:
+    """``with tracing() as tr:`` -- install a (new) tracer for a scope."""
+
+    def __init__(self, tracer: Optional[Tracer] = None):
+        self.tracer = tracer if tracer is not None else Tracer()
+        self._prev = None
+
+    def __enter__(self) -> Tracer:
+        self._prev = set_tracer(self.tracer)
+        return self.tracer
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        set_tracer(self._prev)
+        return False
+
+
+def span(name: str, *, block: bool = False, **attrs):
+    """Span on the active tracer (shared no-op handle when telemetry is
+    off -- safe in hot paths)."""
+    return _ACTIVE.span(name, block=block, **attrs)
+
+
+def stopwatch(name: str, *, block: bool = True, tracer=None, **attrs) -> Span:
+    """Always-timing span: records into ``tracer`` (default: the active
+    one) when enabled, but times -- and honors ``block`` -- regardless.
+
+    Use where the caller consumes ``dur_s`` (``balance_timed``,
+    ``StepStats`` stage timings): the measurement contract must not
+    depend on whether telemetry is on.
+    """
+    tr = tracer if tracer is not None else _ACTIVE
+    return Span(tr if tr.enabled else None, name, block, attrs)
+
+
+def traced(name: Optional[str] = None, *, block: bool = False, tracer=None,
+           **attrs) -> Callable:
+    """Decorator: wrap a function in a span on the active tracer.
+
+    ``block=True`` designates the return value, so the span's clock stops
+    only after the returned arrays are device-ready.  The tracer is
+    resolved per *call* (late binding), so decorated library code follows
+    ``tracing()`` scopes."""
+
+    def deco(fn: Callable) -> Callable:
+        label = name or fn.__qualname__
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            tr = tracer if tracer is not None else _ACTIVE
+            with tr.span(label, block=block, **attrs) as sp:
+                out = fn(*args, **kw)
+                if block:
+                    sp.block_on(out)
+            return out
+        return wrapper
+    return deco

@@ -1,0 +1,67 @@
+"""Shared warn-once deprecation helper + the per-module wrapper hooks."""
+import warnings
+
+import pytest
+
+from repro import deprecation
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    deprecation.reset()
+    yield
+    deprecation.reset()
+
+
+def test_warn_once_fires_once_per_key():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        deprecation.warn_once("k1", "k1 is deprecated", stacklevel=1)
+        deprecation.warn_once("k1", "k1 is deprecated", stacklevel=1)
+        deprecation.warn_once("k2", "k2 is deprecated", stacklevel=1)
+    assert [str(w.message) for w in rec] == ["k1 is deprecated",
+                                            "k2 is deprecated"]
+    assert all(w.category is DeprecationWarning for w in rec)
+
+
+def test_reset_selective_and_global():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        deprecation.warn_once("a", "a!", stacklevel=1)
+        deprecation.warn_once("b", "b!", stacklevel=1)
+        deprecation.reset("a")
+        deprecation.warn_once("a", "a!", stacklevel=1)   # fires again
+        deprecation.warn_once("b", "b!", stacklevel=1)   # still silenced
+        deprecation.reset()
+        deprecation.warn_once("b", "b!", stacklevel=1)   # fires again
+    assert [str(w.message) for w in rec] == ["a!", "b!", "a!", "b!"]
+
+
+def test_module_wrappers_share_the_registry():
+    """The three shims route through one registry, but each under its own
+    key -- silencing one legacy API never silences another."""
+    from repro.core import balancer as core_balancer
+    from repro.fem import adapt as fem_adapt
+    from repro.serve import engine as serve_engine
+
+    for mod in (core_balancer, fem_adapt, serve_engine):
+        mod._reset_deprecation_warning()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        core_balancer._warn_deprecated_once()
+        core_balancer._warn_deprecated_once()
+        fem_adapt._warn_deprecated_once("solve_helmholtz_adaptive")
+        fem_adapt._warn_deprecated_once("solve_parabolic_adaptive")
+        serve_engine._warn_deprecated_once()
+    msgs = [str(w.message) for w in rec]
+    assert len(msgs) == 3
+    assert "BalanceSpec" in msgs[0]
+    assert "AdaptSpec" in msgs[1]
+    assert "ServeSpec" in msgs[2]
+    # the per-module reset hooks still work (the test-suite contract)
+    fem_adapt._reset_deprecation_warning()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        fem_adapt._warn_deprecated_once("solve_helmholtz_adaptive")
+        core_balancer._warn_deprecated_once()   # still silenced
+    assert len(rec) == 1 and "AdaptSpec" in str(rec[0].message)
