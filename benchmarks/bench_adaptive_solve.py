@@ -17,7 +17,12 @@ comparable across PRs -- the same contract as ``bench_dlb --json``.
 (halo-exchange matvec); the per-step record then carries the
 communication-volume columns -- replicated psum bytes vs halo bytes vs
 surface index (``comm_psum_bytes`` / ``comm_halo_bytes`` / ``cut``) --
-i.e. what one matvec would put on the wire under each layout.
+i.e. what one matvec would put on the wire under each layout.  Owned
+runs additionally micro-benchmark the matvec hot path on the final
+packing (``matvec/*`` rows, us per application): the serial
+apply-then-exchange oracle vs the interface-first split vs the split
+plus the fused element kernel (``kernels.fem_matvec``; off-TPU its XLA
+twin), plus the telemetry-backed interface/interior phase split.
 ``--quick`` is the committed-baseline configuration
 (``benchmarks/baselines/BENCH_adaptive.json``): 3 steps, 3000 tets,
 hsfc, p=8 sharded owned.
@@ -25,6 +30,7 @@ hsfc, p=8 sharded owned.
 import dataclasses
 import json
 import os
+import time
 
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     # must be set before the first jax import for --backend sharded runs
@@ -35,6 +41,40 @@ from repro.core import BalanceSpec
 from repro.fem import AdaptSpec, AdaptiveSession, cylinder_mesh
 
 METHODS = ["rtk", "msfc", "hsfc", "hsfc_zoltan", "rcb"]
+
+MATVEC_VARIANTS = (
+    ("unsplit_oracle", dict(overlap=False, use_pallas=False)),
+    ("split", dict(overlap=True, use_pallas=False)),
+    ("split_pallas", dict(overlap=True, use_pallas=True)),
+)
+
+
+def _matvec_microbench(sel, mesh, c, chain=32, repeats=15):
+    """us per matvec application for each hot-path variant, measured as a
+    jitted ``fori_loop`` chain of ``chain`` applications (x0.001 between
+    applications keeps f32 iterates bounded) -- per-dispatch overhead
+    amortizes out.  The variants are timed round-robin (one repeat each
+    per round, best-of over rounds) so clock drift and background load
+    land on all of them equally instead of biasing whichever ran last."""
+    import jax
+    import jax.numpy as jnp
+    from repro.fem.parallel import make_sharded_matvec
+
+    u0 = jnp.ones((sel.p, sel.halo.V), sel.vol.dtype)
+    fns = {}
+    for name, kw in MATVEC_VARIANTS:
+        mv, _ = make_sharded_matvec(sel, mesh, c, **kw)
+        chained = jax.jit(lambda u, mv=mv: jax.lax.fori_loop(
+            0, chain, lambda i, x: mv(x) * 0.001, u))
+        jax.block_until_ready(chained(u0))          # compile + warm
+        fns[name] = chained
+    best = {name: float("inf") for name in fns}
+    for _ in range(repeats):
+        for name, chained in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(chained(u0))
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {name: t / chain * 1e6 for name, t in best.items()}
 
 
 def run(max_steps=4, max_tets=15000, p=16, backend="host", methods=None,
@@ -76,6 +116,16 @@ def run(max_steps=4, max_tets=15000, p=16, backend="host", methods=None,
             "n_repartitions": res.n_repartitions,
             "steps": [dataclasses.asdict(s) for s in res.stats],
         }
+        if (vertex_layout == "owned" and res.sharded is not None
+                and getattr(res.sharded, "n_interface", None) is not None):
+            from repro.fem.parallel import device_mesh
+            from repro.fem.problems import get_problem
+            mb = _matvec_microbench(res.sharded, device_mesh(p),
+                                    get_problem("helmholtz").make().c)
+            for name, _ in MATVEC_VARIANTS:
+                rows.append((f"matvec/{name}/{method}", mb[name],
+                             res.stats[-1].n_tets))
+            records[method]["matvec_us"] = mb
     meta = {"bench": "adaptive_solve", "example": "3.1-helmholtz",
             "backend": backend, "p": p, "max_steps": max_steps,
             "max_tets": max_tets, "vertex_layout": vertex_layout,

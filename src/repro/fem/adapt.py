@@ -108,6 +108,12 @@ class StepStats:
     # surface index the halo bytes scale with
     comm_psum_bytes: int = 0
     comm_halo_bytes: int = 0
+    # split-matvec phase model (owned layout, recorded under tracing):
+    # interface pass + halo exchange vs the interior pass that hides it
+    # (fem.parallel.measure_matvec_phases -- interior >> halo means the
+    # exchange is fully latency-hidden)
+    t_matvec_interior: float = 0.0
+    t_matvec_halo: float = 0.0
 
 
 @dataclass
@@ -363,6 +369,8 @@ class SessionState:
     cut: Optional[int] = None           # surface index of current partition
     comm_psum_bytes: int = 0            # per-matvec comm model (owned)
     comm_halo_bytes: int = 0
+    t_matvec_interior: float = 0.0      # split-matvec phase model (owned,
+    t_matvec_halo: float = 0.0          # measured under tracing only)
     timings: Dict[str, float] = field(default_factory=dict)
 
     @property
@@ -461,11 +469,14 @@ def _pack_owned(session: "AdaptiveSession", state: SessionState):
     state.owned_ops = {}
     state.cut = int(cut_links(jnp.asarray(parts),
                               jnp.asarray(mesh.face_adjacency())))
-    state.comm_psum_bytes = plan.psum_bytes()
-    state.comm_halo_bytes = plan.halo_bytes()
+    # wire bytes in the solve's actual scalar width (f32 by default, f64
+    # under jax_enable_x64) -- the element arrays carry that dtype
+    itemsize = int(np.dtype(el.vol.dtype).itemsize)
+    state.comm_psum_bytes = plan.psum_bytes(itemsize)
+    state.comm_halo_bytes = plan.halo_bytes(itemsize)
     tr = telemetry.get_tracer()
     if tr.enabled:
-        publish_wire_model(plan, tr.metrics)
+        publish_wire_model(plan, tr.metrics, itemsize=itemsize)
 
 
 def _ensure_owned_packing(session: "AdaptiveSession", state: SessionState):
@@ -498,7 +509,11 @@ def _owned_operators(session: "AdaptiveSession", state: SessionState,
     from .parallel import make_owned_operators
     ops = state.owned_ops.get(c)
     if ops is None:
-        ops = make_owned_operators(state.sharded, session.device_mesh, c)
+        # kernel selection reuses PR 4's variant seam: the nested
+        # BalanceSpec's use_pallas flag (None = auto on TPU)
+        ops = make_owned_operators(
+            state.sharded, session.device_mesh, c,
+            use_pallas=session.balance_spec.use_pallas)
         state.owned_ops[c] = ops
     return ops
 
@@ -922,6 +937,19 @@ class AdaptiveSession:
                     "cut", unit="links",
                     help="element-adjacency links crossing parts "
                          "(paper surface index)").set(int(state.cut))
+            if (state.halo is not None and state.sharded is not None
+                    and getattr(state.sharded, "layout", "") == "owned"
+                    and state.sharded.n_interface is not None):
+                # out-of-band split-matvec phase timing (the overlapped
+                # program runs both phases concurrently); runs after the
+                # step's stage spans so t_solve is never inflated
+                from .parallel import measure_matvec_phases
+                c = (getattr(self.problem, "c", 0.0) if self.spec.stationary
+                     else 1.0 / self.spec.dt)
+                t_if, t_int = measure_matvec_phases(
+                    state.sharded, self.device_mesh, c, step=state.step)
+                state.t_matvec_halo = t_if
+                state.t_matvec_interior = t_int
         eta2 = np.asarray(state.eta, np.float64) ** 2
         tm = state.timings
         return StepStats(
@@ -939,7 +967,9 @@ class AdaptiveSession:
             migration_retained=state.migration_retained,
             t_transfer=tm.get("transfer", 0.0),
             comm_psum_bytes=state.comm_psum_bytes,
-            comm_halo_bytes=state.comm_halo_bytes)
+            comm_halo_bytes=state.comm_halo_bytes,
+            t_matvec_interior=state.t_matvec_interior,
+            t_matvec_halo=state.t_matvec_halo)
 
 
 # ---------------------------------------------------------------------------

@@ -100,6 +100,20 @@ class HaloPlan:
         all-reduce."""
         return self.p * self.n_verts * itemsize
 
+    # -- element classification (host/control plane) -----------------------
+    def shared_vertex_mask(self) -> np.ndarray:
+        """(n_verts,) bool: vertices local to >= 2 parts.
+
+        Exactly the vertices ``halo_reduce`` reads or writes (every ghost
+        copy and its owner slot).  An element none of whose vertices are
+        shared is *interior*: it contributes nothing to any slot the
+        exchange touches, so its work can overlap the ``all_to_all``
+        legs -- the classification the interface-first element packing
+        in ``fem.parallel`` is built on.  Host-side numpy (runs once per
+        repartition, alongside plan construction)."""
+        g2l = np.asarray(self.global_to_local)
+        return (g2l < self.V).sum(axis=0) >= 2
+
     # -- layout conversions (global jnp level, outside shard_map) ----------
     def to_local(self, u: jax.Array) -> jax.Array:
         """Replicated (n_verts,) -> (p, V) local layout (padding = 0)."""

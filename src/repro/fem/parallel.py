@@ -41,6 +41,16 @@ Two vertex layouts (``vertex_layout`` on the operators):
                     "Owned-vertex FEM layer" migration guide; the
                     replicated psum used to be called out here as the
                     known production gap).
+
+The owned hot path layers two optimizations on top (README "FEM hot
+path"): packings are interface-first (``ShardedElements.n_interface``)
+so the matvec can hand the interface partials to ``halo_reduce`` before
+the interior elements run -- XLA hides the exchange behind the interior
+FLOPs (``overlap=``) -- and the per-element work can dispatch to the
+fused ``kernels.fem_matvec`` element kernel (``use_pallas=`` /
+``interpret=``, threaded from ``BalanceSpec.use_pallas`` by the
+adaptive session).  ``measure_matvec_phases`` times the two passes
+separately for ``StepStats``.
 """
 from __future__ import annotations
 
@@ -83,7 +93,14 @@ class ShardedElements(NamedTuple):
     ``layout="replicated"``: ``tets`` holds global vertex ids (padding 0,
     vol 0 makes padded elements no-ops).  ``layout="owned"``: ``tets``
     holds part-local slot ids into the ``halo`` plan's (p, V) vertex
-    layout (padding ``halo.V``, dropped by the local scatter)."""
+    layout (padding ``halo.V``, dropped by the local scatter), packed
+    *interface-first*: each part's row leads with its elements that touch
+    a shared vertex (``HaloPlan.shared_vertex_mask``), and
+    ``n_interface`` is the jit-static split point -- the max per-part
+    interface count.  Rows of a part with fewer interface elements carry
+    interior (or padding) elements in ``[count, n_interface)``; they pass
+    through the interface pass harmlessly because they contribute nothing
+    to any slot ``halo_reduce`` touches."""
     tets: jax.Array    # (p, C, 4) int32
     grads: jax.Array   # (p, C, 4, 3)
     vol: jax.Array     # (p, C)  (0 on padding -> padded elements are no-ops)
@@ -91,6 +108,10 @@ class ShardedElements(NamedTuple):
     p: int
     halo: Optional[HaloPlan] = None
     layout: str = "replicated"
+    # static interface/interior split (owned layout): elements [0, S) of
+    # every part feed the halo exchange, [S, C) overlap it.  None on
+    # replicated packings (no exchange to overlap).
+    n_interface: Optional[int] = None
 
 
 def _resolve_layout(sel: ShardedElements, vertex_layout: Optional[str]) -> str:
@@ -113,7 +134,10 @@ def shard_elements(el: P1Elements, parts: np.ndarray, p: int,
 
     With ``halo`` given, connectivity is renumbered to part-local slots
     (owned layout); padding rows point at slot ``halo.V`` so the local
-    scatter drops them."""
+    scatter drops them.  Owned rows are packed interface-first (elements
+    touching a shared vertex lead) with the static split point
+    ``n_interface`` carried on the packing, so the owned matvec can hand
+    the interface partials to the halo exchange before interior work."""
     parts = np.asarray(parts)
     tets = np.asarray(el.tets)
     grads = np.asarray(el.grads)
@@ -125,15 +149,24 @@ def shard_elements(el: P1Elements, parts: np.ndarray, p: int,
     sg = np.zeros((p, C, 4, 3), grads.dtype)
     sv = np.zeros((p, C), vol.dtype)
     g2l = None if halo is None else np.asarray(halo.global_to_local)
+    iface = n_interface = None
+    if halo is not None:
+        iface = halo.shared_vertex_mask()[tets].any(axis=1)
+        n_interface = 0
     for i in range(p):
         idx = np.flatnonzero(parts == i)
+        if iface is not None:
+            f = iface[idx]
+            idx = np.concatenate([idx[f], idx[~f]])    # interface first
+            n_interface = max(n_interface, int(f.sum()))
         t = tets[idx]
         st[i, :idx.size] = t if halo is None else g2l[i, t]
         sg[i, :idx.size] = grads[idx]
         sv[i, :idx.size] = vol[idx]
     return ShardedElements(jnp.asarray(st), jnp.asarray(sg), jnp.asarray(sv),
                            el.n_verts, p, halo=halo,
-                           layout="replicated" if halo is None else "owned")
+                           layout="replicated" if halo is None else "owned",
+                           n_interface=n_interface)
 
 
 def shard_elements_on_device(el: P1Elements, parts: jax.Array, p: int,
@@ -153,7 +186,12 @@ def shard_elements_on_device(el: P1Elements, parts: jax.Array, p: int,
     shard's ``global_to_local`` row rides on the same device mesh and
     renumbers the received connectivity to part-local slots inside the
     same shard_map region (owned layout; padding/invalid rows point at
-    slot ``halo.V``).
+    slot ``halo.V``).  An interface flag per element (does it touch a
+    shared vertex -- classified on the host against the plan, like the
+    receive capacity) rides on the same ``all_to_all``; a stable argsort
+    on arrival reorders each shard's row interface-first, and the static
+    split point ``n_interface`` (max per-part interface count, from the
+    same bincount that sizes the capacity) lands on the packing.
     """
     from ..distributed.migrate import migrate_items
     parts_h = np.asarray(parts)
@@ -173,35 +211,52 @@ def shard_elements_on_device(el: P1Elements, parts: jax.Array, p: int,
     grads = pad(el.grads)
     vol = pad(el.vol)
     dest = pad(parts, jnp.int32)
+    n_interface = iface = None
+    if halo is not None:
+        iface_h = halo.shared_vertex_mask()[np.asarray(el.tets)].any(axis=1)
+        n_interface = int(np.bincount(parts_h[iface_h], minlength=p).max())
+        iface = pad(iface_h.astype(np.int32), jnp.int32)
 
-    def local(tets_l, grads_l, vol_l, dest_l, *g2l_l):
+    def local(tets_l, grads_l, vol_l, dest_l, *extra):
         rank = jax.lax.axis_index(AXIS)
         valid = rank * C_in + jnp.arange(C_in) < n
-        mig = migrate_items(
-            {"tets": tets_l, "grads": grads_l, "vol": vol_l},
-            dest_l, vol_l, AXIS, p, valid=valid, capacity=cap)
-        t = mig.payload["tets"]
+        payload = {"tets": tets_l, "grads": grads_l, "vol": vol_l}
+        if halo is not None:
+            payload["iface"] = extra[0]
+        mig = migrate_items(payload, dest_l, vol_l, AXIS, p, valid=valid,
+                            capacity=cap)
+        t, g, v = (mig.payload["tets"], mig.payload["grads"],
+                   mig.payload["vol"])
+        val = mig.valid
         if halo is None:
-            t = jnp.where(mig.valid[:, None], t, 0)
+            t = jnp.where(val[:, None], t, 0)
         else:
+            # interface-first within the shard: stable argsort on
+            # (0 = interface, 1 = interior, 2 = padding) keeps arrival
+            # order inside each class and pushes padding last
+            key = jnp.where(val, jnp.where(mig.payload["iface"] > 0, 0, 1),
+                            2)
+            order = jnp.argsort(key)
+            t, g, v, val = t[order], g[order], v[order], val[order]
             # renumber to part-local slots; invalid/padding -> slot V
-            t = g2l_l[0][0][jnp.minimum(t, halo.n_verts - 1)]
-            t = jnp.where(mig.valid[:, None], t, halo.V)
-        g = jnp.where(mig.valid[:, None, None], mig.payload["grads"], 0.0)
-        v = jnp.where(mig.valid, mig.payload["vol"], 0.0)
+            t = extra[1][0][jnp.minimum(t, halo.n_verts - 1)]
+            t = jnp.where(val[:, None], t, halo.V)
+        g = jnp.where(val[:, None, None], g, 0.0)
+        v = jnp.where(val, v, 0.0)
         return t, g, v
 
-    n_in = 4 if halo is None else 5
+    n_in = 4 if halo is None else 6
     fn = jax.jit(shard_map(local, mesh=mesh, in_specs=(P(AXIS),) * n_in,
                            out_specs=(P(AXIS),) * 3))
     args = (tets, grads, vol, dest)
     if halo is not None:
-        args = args + (halo.global_to_local,)
+        args = args + (iface, halo.global_to_local)
     st, sg, sv = fn(*args)
     return ShardedElements(st.reshape(p, cap, 4),
                            sg.reshape(p, cap, 4, 3),
                            sv.reshape(p, cap), el.n_verts, p, halo=halo,
-                           layout="replicated" if halo is None else "owned")
+                           layout="replicated" if halo is None else "owned",
+                           n_interface=n_interface)
 
 
 def reshard_elements(el: P1Elements, coords: jax.Array, p: int, *,
@@ -246,9 +301,25 @@ def reshard_elements(el: P1Elements, coords: jax.Array, p: int, *,
     return sel, res
 
 
+def element_apply(t, g, v, u, nv, c=0.0):
+    """Element-local gather -> geometry apply -> scatter (the oracle pass).
+
+    Padded elements have g = 0, v = 0 -> au = 0 there, so clamped gathers
+    and dropped/clipped scatter ids never contribute."""
+    ue = u[jnp.minimum(t, nv - 1)]                    # (C, 4); pad -> x0
+    flux = jnp.einsum("cid,ci->cd", g, ue)
+    au = jnp.einsum("cjd,cd->cj", g, flux) * v[:, None]
+    if c != 0.0:
+        au = au + c * jnp.einsum("ij,cj->ci", _MASS, ue) * v[:, None]
+    return jax.ops.segment_sum(au.reshape(-1), t.reshape(-1),
+                               num_segments=nv)
+
+
 def make_sharded_matvec(sel: ShardedElements, mesh: JMesh, c: float = 0.0,
-                        vertex_layout: Optional[str] = None
-                        ) -> Tuple[Callable, tuple]:
+                        vertex_layout: Optional[str] = None, *,
+                        overlap: Optional[bool] = None,
+                        use_pallas: Optional[bool] = None,
+                        interpret: bool = False) -> Tuple[Callable, tuple]:
     """Returns (matvec, element arrays placed on the mesh).
 
     ``vertex_layout`` (default: the packing's own layout):
@@ -261,6 +332,26 @@ def make_sharded_matvec(sel: ShardedElements, mesh: JMesh, c: float = 0.0,
       input must be ghost-consistent (every copy of a shared vertex
       equal -- what ``HaloPlan.to_local`` and the matvec itself
       produce), and the output is ghost-consistent again.
+
+    Owned-layout hot-path knobs:
+
+    ``overlap`` (default: on whenever the packing carries a split point)
+      computes the interface elements ``[0, n_interface)`` first and
+      hands their partials to the halo exchange *before* the interior
+      elements run, so XLA can hide the two ``all_to_all`` legs behind
+      the interior FLOPs.  Exact up to float summation order: interior
+      elements touch no shared vertex, so
+      ``halo_reduce(y_if) + y_int == halo_reduce(y_if + y_int)``.
+      ``overlap=False`` forces the serial apply-everything-then-exchange
+      oracle (the parity and micro-benchmark baseline).
+    ``use_pallas`` / ``interpret`` select the fused element kernel for
+      the per-element work (``kernels.fem_matvec``: precomputed 4x4
+      element matrices streamed through one launch) via the same
+      dispatch contract as every other kernel: ``None`` auto-selects on
+      TPU, ``False`` is the inline einsum oracle, ``True`` runs the
+      kernel (compiled on TPU; off-TPU its fused-XLA twin, or the Pallas
+      interpreter when ``interpret=True``).  Kernel and oracle are
+      tolerance-exact, not bit-exact (different accumulation order).
     """
     layout = _resolve_layout(sel, vertex_layout)
     spec_el = NamedSharding(mesh, P(AXIS))
@@ -268,23 +359,12 @@ def make_sharded_matvec(sel: ShardedElements, mesh: JMesh, c: float = 0.0,
     grads = jax.device_put(sel.grads, spec_el)
     vol = jax.device_put(sel.vol, spec_el)
 
-    def element_apply(t, g, v, u, nv):
-        ue = u[jnp.minimum(t, nv - 1)]                # (C, 4); pad -> x0
-        flux = jnp.einsum("cid,ci->cd", g, ue)
-        au = jnp.einsum("cjd,cd->cj", g, flux) * v[:, None]
-        if c != 0.0:
-            au = au + c * jnp.einsum("ij,cj->ci", _MASS, ue) * v[:, None]
-        # padded elements have g = 0, v = 0 -> au = 0 there, so clamped
-        # gathers and dropped/clipped scatter ids never contribute
-        return jax.ops.segment_sum(au.reshape(-1), t.reshape(-1),
-                                   num_segments=nv)
-
     if layout == "replicated":
         nv = sel.n_verts
 
         def local_apply(tets_l, grads_l, vol_l, u):
             # (1, C, ...) block -> squeeze the part dim
-            y = element_apply(tets_l[0], grads_l[0], vol_l[0], u, nv)
+            y = element_apply(tets_l[0], grads_l[0], vol_l[0], u, nv, c)
             return jax.lax.psum(y, AXIS)
 
         shmap = shard_map(
@@ -298,21 +378,63 @@ def make_sharded_matvec(sel: ShardedElements, mesh: JMesh, c: float = 0.0,
         return matvec, (tets, grads, vol)
 
     plan = sel.halo
+    S = sel.n_interface
+    if overlap is None:
+        overlap = S is not None
+    if overlap and S is None:
+        raise ValueError("overlap needs an interface-split packing "
+                         "(repack with shard_elements*/reshard_elements, "
+                         "which set n_interface for owned layouts)")
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    kel = None
+    if use_pallas:
+        # per-element 4x4 operators: constant across matvecs on a fixed
+        # packing, so build once here and stream per call
+        from ..kernels.fem_matvec import fem_element_matrices
+        kel = jax.device_put(fem_element_matrices(sel.grads, sel.vol, c),
+                             spec_el)
+
+    def apply_elements(t, g, v, k, u):
+        if use_pallas:
+            from ..kernels import fem_matvec_op
+            return fem_matvec_op(t, g, v, u, plan.V, c=c, kel=k,
+                                 use_pallas=True, interpret=interpret)
+        return element_apply(t, g, v, u, plan.V, c)
+
+    def local_apply_owned(*a):
+        head = 4 if kel is not None else 3
+        t, g, v = a[0][0], a[1][0], a[2][0]
+        k = a[3][0] if kel is not None else None
+        send, recv, u = a[head][0], a[head + 1][0], a[head + 2][0]
+
+        def ap(sl):
+            return apply_elements(t[sl], g[sl], v[sl],
+                                  None if k is None else k[sl], u)
+
+        if not overlap:
+            return halo_reduce(ap(slice(None)), send, recv, AXIS)[None]
+        # interface pass first: its partials are all the two all_to_all
+        # legs consume, so tracing it before the interior pass puts the
+        # collectives ahead of the interior FLOPs in program order --
+        # XLA overlaps the neighbor exchange with the interior elements.
+        y = halo_reduce(ap(slice(0, S)), send, recv, AXIS)
+        return (y + ap(slice(S, None)))[None]
+
     send_idx = jax.device_put(plan.send_idx, spec_el)
     recv_idx = jax.device_put(plan.recv_idx, spec_el)
-
-    def local_apply_owned(tets_l, grads_l, vol_l, send_l, recv_l, u_l):
-        y = element_apply(tets_l[0], grads_l[0], vol_l[0], u_l[0], plan.V)
-        return halo_reduce(y, send_l[0], recv_l[0], AXIS)[None]
-
+    el_args = (tets, grads, vol) if kel is None else (tets, grads, vol, kel)
+    # pallas_call has no shard_map replication rule; nothing in the owned
+    # region is replicated (everything is P(AXIS)), so the check is vacuous.
     shmap = shard_map(
         local_apply_owned, mesh=mesh,
-        in_specs=(P(AXIS),) * 6, out_specs=P(AXIS))
+        in_specs=(P(AXIS),) * (len(el_args) + 3), out_specs=P(AXIS),
+        check_rep=not use_pallas)
 
     def matvec_owned(u):
-        return shmap(tets, grads, vol, send_idx, recv_idx, u)
+        return shmap(*el_args, send_idx, recv_idx, u)
 
-    return matvec_owned, (tets, grads, vol, send_idx, recv_idx)
+    return matvec_owned, el_args + (send_idx, recv_idx)
 
 
 def sharded_diagonal(sel: ShardedElements, mesh: JMesh, c: float = 0.0,
@@ -358,17 +480,81 @@ def sharded_diagonal(sel: ShardedElements, mesh: JMesh, c: float = 0.0,
         tets, grads, vol, send_idx, recv_idx)
 
 
-def make_owned_operators(sel: ShardedElements, mesh: JMesh, c: float = 0.0
+def make_owned_operators(sel: ShardedElements, mesh: JMesh, c: float = 0.0,
+                         *, overlap: Optional[bool] = None,
+                         use_pallas: Optional[bool] = None,
+                         interpret: bool = False
                          ) -> Tuple[Callable, jax.Array]:
     """(matvec, diagonal) pair for an owned-layout packing.
 
     Build once per packing and reuse across solves (e.g. every time step
     between repartitions) -- the closures carry the device-placed element
     and plan arrays, so rebuilding them per call re-places and re-traces
-    for nothing."""
-    matvec, _ = make_sharded_matvec(sel, mesh, c, vertex_layout="owned")
+    for nothing.  ``overlap`` / ``use_pallas`` / ``interpret`` select the
+    matvec hot path (see ``make_sharded_matvec``); the diagonal is a
+    once-per-packing setup cost and stays on the oracle pass."""
+    matvec, _ = make_sharded_matvec(sel, mesh, c, vertex_layout="owned",
+                                    overlap=overlap, use_pallas=use_pallas,
+                                    interpret=interpret)
     diag = sharded_diagonal(sel, mesh, c, vertex_layout="owned")
     return matvec, diag
+
+
+def measure_matvec_phases(sel: ShardedElements, mesh: JMesh, c: float = 0.0,
+                          *, u: Optional[jax.Array] = None,
+                          **attrs) -> Tuple[float, float]:
+    """Time the two phases of the split owned matvec separately.
+
+    The overlapped program runs the interface pass + halo exchange
+    concurrently with the interior pass, so their costs can only be
+    separated out of band: this runs each phase as its own jitted
+    shard_map program (compiled and warmed outside the clocks) under the
+    telemetry stopwatches ``fem/matvec_interface`` (the work the two
+    ``all_to_all`` legs wait on, plus the legs themselves) and
+    ``fem/matvec_interior`` (the FLOPs that hide them), and returns
+    ``(t_interface_s, t_interior_s)``.  The adaptive session records the
+    pair as ``StepStats.t_matvec_halo`` / ``t_matvec_interior`` when
+    tracing is on; interior >> interface is the latency-hiding headroom
+    the split exists for.  Phases run the oracle element pass -- the
+    phase *ratio*, not the kernel, is what is being measured."""
+    from .. import telemetry
+    if sel.layout != "owned" or sel.halo is None or sel.n_interface is None:
+        raise ValueError("measure_matvec_phases needs an interface-split "
+                         "owned packing")
+    plan, S = sel.halo, sel.n_interface
+    spec_el = NamedSharding(mesh, P(AXIS))
+    tets = jax.device_put(sel.tets, spec_el)
+    grads = jax.device_put(sel.grads, spec_el)
+    vol = jax.device_put(sel.vol, spec_el)
+    send_idx = jax.device_put(plan.send_idx, spec_el)
+    recv_idx = jax.device_put(plan.recv_idx, spec_el)
+    if u is None:
+        u = jnp.ones((sel.p, plan.V), sel.vol.dtype)
+    u = jax.device_put(u, spec_el)
+
+    def interface(t_l, g_l, v_l, s_l, r_l, u_l):
+        y = element_apply(t_l[0][:S], g_l[0][:S], v_l[0][:S], u_l[0],
+                          plan.V, c)
+        return halo_reduce(y, s_l[0], r_l[0], AXIS)[None]
+
+    def interior(t_l, g_l, v_l, u_l):
+        return element_apply(t_l[0][S:], g_l[0][S:], v_l[0][S:], u_l[0],
+                             plan.V, c)[None]
+
+    f_if = jax.jit(shard_map(interface, mesh=mesh,
+                             in_specs=(P(AXIS),) * 6, out_specs=P(AXIS)))
+    f_int = jax.jit(shard_map(interior, mesh=mesh,
+                              in_specs=(P(AXIS),) * 4, out_specs=P(AXIS)))
+    jax.block_until_ready(f_if(tets, grads, vol, send_idx, recv_idx, u))
+    jax.block_until_ready(f_int(tets, grads, vol, u))
+    with telemetry.stopwatch("fem/matvec_interface", n_interface=S,
+                             **attrs) as sw_if:
+        sw_if.block_on(f_if(tets, grads, vol, send_idx, recv_idx, u))
+    with telemetry.stopwatch("fem/matvec_interior",
+                             n_interior=int(sel.tets.shape[1]) - S,
+                             **attrs) as sw_int:
+        sw_int.block_on(f_int(tets, grads, vol, u))
+    return sw_if.dur_s, sw_int.dur_s
 
 
 def sharded_solve_dirichlet(sel: ShardedElements, mesh: JMesh,
@@ -376,7 +562,10 @@ def sharded_solve_dirichlet(sel: ShardedElements, mesh: JMesh,
                             c: float, *, tol: float = 1e-8,
                             maxiter: int = 2000,
                             operators: Optional[Tuple[Callable, jax.Array]]
-                            = None) -> CGResult:
+                            = None,
+                            overlap: Optional[bool] = None,
+                            use_pallas: Optional[bool] = None,
+                            interpret: bool = False) -> CGResult:
     """Owned-layout distributed PCG solve of (A + cM) u = rhs, u = g on
     pinned dofs.
 
@@ -391,7 +580,9 @@ def sharded_solve_dirichlet(sel: ShardedElements, mesh: JMesh,
 
     ``operators``: a prebuilt ``make_owned_operators(sel, mesh, c)``
     pair; callers solving repeatedly on the same packing should build it
-    once and pass it in.
+    once and pass it in.  ``overlap`` / ``use_pallas`` / ``interpret``
+    select the matvec hot path when operators are built here (ignored
+    when ``operators`` is passed -- the prebuilt pair already chose).
     """
     if sel.layout != "owned" or sel.halo is None:
         raise ValueError("sharded_solve_dirichlet needs an owned-layout "
@@ -405,7 +596,9 @@ def sharded_solve_dirichlet(sel: ShardedElements, mesh: JMesh,
     owned = place(plan.owned_mask)
 
     if operators is None:
-        operators = make_owned_operators(sel, mesh, c)
+        operators = make_owned_operators(sel, mesh, c, overlap=overlap,
+                                         use_pallas=use_pallas,
+                                         interpret=interpret)
     matvec, diag_l = operators
 
     g_ext = jnp.where(free_l > 0, 0.0, g_l)

@@ -16,9 +16,12 @@ Kernels:
                    (streaming compare-accumulate, no sort/scatter)
   flash_attention  blocked online-softmax attention (causal/SWA/GQA) --
                    the LM substrate's dominant compute at 32k prefill
+  fem_matvec       fused P1 element matvec (gather -> precomputed-4x4
+                   apply -> scatter-accumulate as one-hot matmuls) --
+                   the owned-layout FEM hot path's per-call element work
 
 All validated in interpret mode on CPU (tests/test_kernels.py) over
 shape/dtype sweeps; compiled BlockSpecs target the TPU MXU/VPU layouts.
 """
-from .ops import (exclusive_scan_op, flash_attention_op,
+from .ops import (exclusive_scan_op, fem_matvec_op, flash_attention_op,
                   ksection_histogram_op, sfc_keys_op)

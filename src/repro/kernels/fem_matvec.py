@@ -1,0 +1,167 @@
+"""Pallas TPU kernel: fused P1 element matvec (gather -> apply -> scatter).
+
+Paper mapping (section 1, the compute model): the distributed FEM
+operator is element-local -- gather the 4 vertex values of each tet,
+apply the 4x4 element stiffness (+ optional mass) matrix, scatter the 4
+results back into the vertex vector.  After PR 5 the *communication* of
+that matvec is cut-proportional (`fem.halo`), so the remaining per-call
+cost is exactly this gather/apply/scatter streak over the local
+elements.  It is the FEM analogue of the k-section histogram PR 4 fused
+(`kernels/ksection_hist.py`): a streaming pass whose baseline spends its
+time in an HBM-materialized intermediate and a serialized scatter.
+
+The baseline (`ref.fem_matvec_ref`, the math `fem.parallel` inlines)
+runs four XLA ops per call: a vertex gather, two einsums re-deriving the
+element geometry (gradients x gradients) on every call, and a
+4C-element ``segment_sum`` scatter-add -- the expensive part on TPU,
+where scatter serializes.
+
+This kernel restructures the hot path around two ideas:
+
+* **precomputed element matrices**: the per-element 4x4 operator
+  ``K_e = (g g^T + c M) |e|`` is constant across matvecs (PCG calls the
+  operator tens of times per solve on a fixed mesh), so it is built once
+  per packing (`fem_element_matrices`) and streamed, replacing the
+  per-call geometry einsums with a single 4x4 apply;
+* **one launch, no scatter**: ``(tets, K_e)`` tiles stream HBM->VMEM
+  (one grid step per element tile) against the VMEM-resident vertex
+  vector; gather and scatter-accumulate are expressed as one-hot
+  matmuls against the tile's slot-id block (the MXU-friendly TPU form
+  of indexed access), and the (1, Vp) output block doubles as the
+  accumulator across the serialized grid steps.
+
+VMEM budget: the one-hot blocks are (block, Vp) per corner, so the
+vertex extent must fit on chip -- Vp * block * 4B per corner, i.e.
+part-local vertex counts up to a few thousand at the default block.
+That is the owned-layout regime this kernel targets (the *part-local*
+vector after `fem.halo` sharding, not the global mesh); larger parts
+fall back to the oracle via the `ops.fem_matvec_op` dispatch.
+
+Contract (assignment): ``ops.fem_matvec_op`` is the public wrapper
+(oracle fallback off-TPU, interpret mode on CPU when requested);
+``ref.fem_matvec_ref`` is the gather/einsum/segment_sum oracle;
+``fem_matvec_jnp`` is the kernel's precomputed-K math as fused XLA ops
+-- the CPU-executable stand-in the benchmarks time (interpret mode
+times the Pallas *emulator*, not the op).  Parity is asserted in
+interpret mode over shape/edge sweeps in ``tests/test_kernels.py``.
+Accumulation order differs from the oracle (per-slot partial sums per
+tile instead of one global segment_sum), so float parity is
+tolerance-exact, not bit-exact -- same contract as the flash-attention
+kernel, documented at the dispatch site.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK_C = 256    # elements per HBM->VMEM tile
+LANES = 128      # vertex-axis padding multiple (VPU lane count)
+
+# P1 reference-tet mass matrix scaled by 20 (kept integer-exact; the
+# caller multiplies by vol/20) -- mirrors fem.assemble._MASS * 20.
+_MASS20 = np.full((4, 4), 1.0, np.float64) + np.eye(4)
+
+
+def fem_element_matrices(grads: jax.Array, vol: jax.Array,
+                         c: float = 0.0) -> jax.Array:
+    """Per-element 4x4 operator ``K_e = (grad_j . grad_i + c M_ji) |e|``.
+
+    ``grads``: (..., C, 4, 3), ``vol``: (..., C) -> (..., C, 4, 4).
+    Constant across matvecs on a fixed packing -- build once, stream
+    per call.  Padding elements (grads = 0, vol = 0) get K_e = 0, so
+    they are no-ops wherever their slot ids point."""
+    k = jnp.einsum("...cid,...cjd->...cij", grads, grads)
+    if c != 0.0:
+        mass = jnp.asarray(_MASS20 / 20.0, k.dtype)
+        k = k + c * mass
+    return k * vol[..., None, None]
+
+
+def _matvec_kernel(t_ref, k_ref, u_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[0, :]                     # (Vp,)  resident vertex values
+    t = t_ref[...]                      # (4, B) slot id per corner
+    k = k_ref[...]                      # (16, B) K_e rows, j*4+i major
+    B = t.shape[1]
+    Vp = u.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (B, Vp), 1)
+    # one-hot slot blocks: indexed gather/scatter as MXU matmuls
+    oh = [(t[corner, :, None] == cols).astype(k.dtype) for corner in range(4)]
+    ue = [jnp.dot(oh[corner], u) for corner in range(4)]        # 4 x (B,)
+    for j in range(4):
+        au = (k[4 * j + 0] * ue[0] + k[4 * j + 1] * ue[1]
+              + k[4 * j + 2] * ue[2] + k[4 * j + 3] * ue[3])    # (B,)
+        out_ref[0, :] += jnp.dot(au, oh[j])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_out", "interpret", "block"))
+def fem_matvec_pallas(tets: jax.Array, kel: jax.Array, u: jax.Array,
+                      n_out: int, *, interpret: bool = False,
+                      block: int = BLOCK_C) -> jax.Array:
+    """Fused element matvec in one launch.
+
+    ``tets``: (C, 4) int32 slot ids in [0, n_out] (n_out = pad slot,
+    dropped); ``kel``: (C, 4, 4) precomputed element matrices
+    (`fem_element_matrices`); ``u``: (V,) vertex values with V >= n_out.
+    Returns (n_out,) accumulated element contributions.  Arbitrary C:
+    element tiles are padded with (slot n_out, K_e = 0) rows -- no-ops
+    by construction -- and the vertex axis is padded to the lane
+    multiple and sliced back."""
+    C = tets.shape[0]
+    if C == 0:
+        return jnp.zeros((n_out,), u.dtype)
+    block = min(block, C + (-C) % 8)
+    pad_c = (-C) % block
+    t = tets.astype(jnp.int32)
+    k = kel.reshape(C, 16).astype(u.dtype)
+    if pad_c:
+        t = jnp.concatenate([t, jnp.full((pad_c, 4), n_out, jnp.int32)])
+        k = jnp.concatenate([k, jnp.zeros((pad_c, 16), k.dtype)])
+    # SoA layout: last axis = element tile (lane-aligned on TPU)
+    t_soa = t.T                                      # (4, C_pad)
+    k_soa = k.T                                      # (16, C_pad)
+    # slot n_out (padding) must stay addressable -> width covers it
+    Vp = n_out + 1 + (-(n_out + 1)) % LANES
+    up = jnp.zeros((Vp,), u.dtype).at[:u.shape[0]].set(u[:Vp]) \
+        if u.shape[0] < Vp else u[:Vp]
+    rows = (C + pad_c) // block
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((4, block), lambda i: (0, i)),
+                  pl.BlockSpec((16, block), lambda i: (0, i)),
+                  pl.BlockSpec((1, Vp), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, Vp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, Vp), u.dtype),
+        interpret=interpret,
+    )(t_soa, k_soa, up.reshape(1, Vp))
+    return out[0, :n_out]
+
+
+@functools.partial(jax.jit, static_argnames=("n_out",))
+def fem_matvec_jnp(tets: jax.Array, kel: jax.Array, u: jax.Array,
+                   n_out: int) -> jax.Array:
+    """The kernel's precomputed-K math as fused XLA ops.
+
+    Used by the benchmarks as the CPU-executable stand-in for the
+    compiled kernel (interpret mode times the Pallas *emulator*, not
+    the op) and by the tests as a second oracle: one gather, one 4x4
+    apply against the streamed K_e (no per-call geometry einsums), one
+    scatter-add.  Beats the geometry-recomputing oracle on CPU; on TPU
+    the Pallas form additionally removes the serialized scatter."""
+    nv = u.shape[0]
+    ue = u[jnp.minimum(tets, nv - 1)]                # (C, 4); pad -> x0
+    au = jnp.einsum("cij,cj->ci", kel.astype(u.dtype), ue)
+    # pad rows have K_e = 0 -> au = 0; out-of-range slots drop
+    return jax.ops.segment_sum(au.reshape(-1), tets.reshape(-1),
+                               num_segments=n_out)

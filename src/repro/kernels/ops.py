@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .fem_matvec import (BLOCK_C, fem_element_matrices, fem_matvec_jnp,
+                         fem_matvec_pallas)
 from .flash_attention import flash_attention_pallas
 from .ksection_hist import ksection_histogram_pallas
 from .prefix_scan import exclusive_scan_pallas
@@ -87,6 +89,39 @@ def ksection_histogram_op(keys: jax.Array, weights: jax.Array,
     return ksection_histogram_pallas(keys, weights, cuts,
                                      interpret=interpret or not _ON_TPU,
                                      block=block)
+
+
+def fem_matvec_op(tets: jax.Array, grads: jax.Array, vol: jax.Array,
+                  u: jax.Array, n_out: int, *, c: float = 0.0,
+                  kel: Optional[jax.Array] = None,
+                  use_pallas: Optional[bool] = None,
+                  interpret: bool = False,
+                  block: int = BLOCK_C) -> jax.Array:
+    """Fused P1 element matvec: (C, 4) slot ids + element geometry against
+    a (V,) vertex vector -> (n_out,) accumulated contributions.
+
+    ``use_pallas=False`` (the CPU default) runs the geometry oracle --
+    bit-identical to the inline einsum pass in ``fem.parallel``.  The
+    kernel path streams precomputed 4x4 element matrices (``kel``; built
+    here from (grads, vol, c) when not supplied -- callers on a fixed
+    packing should precompute via ``fem_element_matrices`` and pass it)
+    through one launch: compiled Pallas on TPU, the Pallas interpreter
+    when ``interpret=True``, and otherwise the kernel's fused-XLA twin
+    ``fem_matvec_jnp`` off-TPU (interpret mode times the emulator, not
+    the op, so benches and production CPU fallbacks want the twin).
+    Kernel/twin vs oracle differ in accumulation order: tolerance-exact,
+    not bit-exact."""
+    if use_pallas is None:
+        use_pallas = _ON_TPU
+    if not use_pallas:
+        return _ref.fem_matvec_ref(tets, grads, vol, u, n_out, c=c)
+    if kel is None:
+        kel = fem_element_matrices(grads, vol, c)
+    if interpret or _ON_TPU:
+        return fem_matvec_pallas(tets, kel, u, n_out,
+                                 interpret=interpret or not _ON_TPU,
+                                 block=block)
+    return fem_matvec_jnp(tets, kel, u, n_out)
 
 
 def flash_attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from ..core import partition1d as _p1d
 from ..core import sfc as _sfc
+from .fem_matvec import _MASS20
 
 
 # --- sfc_keys --------------------------------------------------------------
@@ -36,6 +37,30 @@ def ksection_histogram_ref(keys: jax.Array, weights: jax.Array,
     oracle IS the production fallback path."""
     return _p1d.weight_below(keys, weights.astype(jnp.float32),
                              cuts).astype(jnp.float32)
+
+
+# --- fem_matvec ------------------------------------------------------------
+
+def fem_matvec_ref(tets: jax.Array, grads: jax.Array, vol: jax.Array,
+                   u: jax.Array, n_out: int, *, c: float = 0.0) -> jax.Array:
+    """Element-local FEM matvec oracle: gather the 4 vertex values, apply
+    the stiffness (+ optional ``c``.mass) geometry einsums, scatter-add.
+
+    Mirrors ``fem.parallel.element_apply`` / ``fem.assemble
+    .stiffness_matvec`` exactly (same clamped pad gather, same vol = 0
+    no-op padding convention, same reference-tet mass matrix), so the
+    dispatch's ``use_pallas=False`` path is bit-identical to the inline
+    production math.  ``tets``: (C, 4) slot ids in [0, n_out] (n_out =
+    dropped pad slot); ``u``: (V,) with V >= n_out."""
+    nv = u.shape[0]
+    mass = jnp.asarray(_MASS20 / 20.0, grads.dtype)
+    ue = u[jnp.minimum(tets, nv - 1)]                 # (C, 4); pad -> x0
+    flux = jnp.einsum("cid,ci->cd", grads, ue)
+    au = jnp.einsum("cjd,cd->cj", grads, flux) * vol[:, None]
+    if c != 0.0:
+        au = au + c * jnp.einsum("ij,cj->ci", mass, ue) * vol[:, None]
+    return jax.ops.segment_sum(au.reshape(-1), tets.reshape(-1),
+                               num_segments=n_out)
 
 
 # --- flash_attention -------------------------------------------------------

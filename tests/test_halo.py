@@ -277,6 +277,188 @@ def test_adaptive_session_owned_matches_replicated():
         assert 0 < last.comm_halo_bytes < last.comm_psum_bytes
 
 
+# ---------------------------------------------------------------------------
+# Interface-split packing + overlapped matvec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+def test_split_packing_classifies_interface_first(p):
+    """Owned packings order each part's row interface-first: every element
+    touching a shared vertex sits before every element that doesn't, and
+    the jit-static split point covers the per-part interface counts."""
+    from repro.fem.parallel import (device_mesh, shard_elements,
+                                    shard_elements_on_device)
+    m = _random_refined_mesh(70 + p)
+    el = build_elements(m.verts, m.tets)
+    parts = _partition(m, p)
+    plan = build_halo_plan(m.tets, parts, m.n_verts, p)
+    shared = plan.shared_vertex_mask()
+    lv = np.asarray(plan.local_verts)
+    packs = [shard_elements(el, parts, p, halo=plan),
+             shard_elements_on_device(el, jnp.asarray(parts), p,
+                                      device_mesh(p), halo=plan)]
+    for sel in packs:
+        S = sel.n_interface
+        assert S is not None
+        tets = np.asarray(sel.tets)
+        vol = np.asarray(sel.vol)
+        def row_iface(r):
+            # clamp twice: pad elements -> slot V, pad slots -> vertex
+            # n_verts; both land on & valid below
+            gv = lv[r, np.minimum(tets[r], plan.V - 1)]
+            return (shared[np.minimum(gv, plan.n_verts - 1)].any(axis=1)
+                    & (vol[r] > 0))
+
+        for r in range(p):
+            valid = vol[r] > 0
+            iface = row_iface(r)
+            flags = iface.astype(int) * 2 + valid.astype(int)
+            # interface (3) strictly before interior (1) before padding (0)
+            assert (np.diff(flags) <= 0).all(), r
+            assert iface.sum() <= S
+        assert max(int(row_iface(r).sum()) for r in range(p)) == S
+
+
+@pytest.mark.parametrize("p", [2, 4, 8])
+def test_split_matvec_matches_unsplit(p):
+    """The overlapped (interface-first) matvec equals the serial
+    apply-everything-then-exchange oracle on the same packing; exact up
+    to f32 summation order."""
+    from repro.fem.parallel import (device_mesh, make_sharded_matvec,
+                                    shard_elements, sharded_diagonal)
+    m = _random_refined_mesh(80 + p)
+    el = build_elements(m.verts, m.tets)
+    parts = _partition(m, p)
+    plan = build_halo_plan(m.tets, parts, m.n_verts, p)
+    jmesh = device_mesh(p)
+    sel = shard_elements(el, parts, p, halo=plan)
+    u = jnp.asarray(
+        np.random.default_rng(p).random(m.n_verts).astype(np.float32))
+    ul = plan.to_local(u)
+    mv_split, _ = make_sharded_matvec(sel, jmesh, c=1.0, overlap=True)
+    mv_serial, _ = make_sharded_matvec(sel, jmesh, c=1.0, overlap=False)
+    gap = float(jnp.max(jnp.abs(mv_split(ul) - mv_serial(ul))))
+    assert gap < 1e-5
+    # diagonal is split-agnostic (same packing, full-row reduction)
+    d = sharded_diagonal(sel, jmesh, 1.0)
+    dref = operator_diagonal(el, 1.0)
+    assert float(jnp.max(jnp.abs(plan.from_local(d) - dref))) < 1e-4
+
+
+def test_split_matvec_jaxpr_orders_exchange_before_interior():
+    """The whole point of the split: in the overlapped jaxpr the two
+    all_to_all legs are traced BEFORE the interior element flops (so XLA
+    can hide the exchange), i.e. element dot_generals appear after the
+    last all_to_all.  The unsplit oracle finishes every element before
+    the first leg -- nothing left to overlap."""
+    from repro.fem.parallel import (device_mesh, make_sharded_matvec,
+                                    shard_elements)
+    p = 4
+    m = _random_refined_mesh(17)
+    el = build_elements(m.verts, m.tets)
+    parts = _partition(m, p)
+    plan = build_halo_plan(m.tets, parts, m.n_verts, p)
+    jmesh = device_mesh(p)
+    sel = shard_elements(el, parts, p, halo=plan)
+    u = plan.to_local(jnp.zeros(m.n_verts, jnp.float32))
+    mv_split, _ = make_sharded_matvec(sel, jmesh, c=1.0, overlap=True)
+    ir = str(jax.make_jaxpr(mv_split)(u))
+    assert "all_to_all" in ir
+    assert "dot_general" in ir[ir.rindex("all_to_all"):]
+    mv_serial, _ = make_sharded_matvec(sel, jmesh, c=1.0, overlap=False)
+    ir = str(jax.make_jaxpr(mv_serial)(u))
+    assert "dot_general" not in ir[ir.index("all_to_all"):]
+
+
+def test_split_matvec_handles_no_interface():
+    """Everything on one part: no shared vertices, split point 0, the
+    interface pass is empty -- the overlapped matvec still matches the
+    dense oracle (and the other 7 parts are fully empty)."""
+    from repro.fem.parallel import (device_mesh, make_sharded_matvec,
+                                    shard_elements)
+    p = 8
+    m = _random_refined_mesh(23, levels=1)
+    el = build_elements(m.verts, m.tets)
+    parts = np.zeros(m.n_tets, np.int64)
+    plan = build_halo_plan(m.tets, parts, m.n_verts, p)
+    assert plan.n_ghost_total == 0
+    sel = shard_elements(el, parts, p, halo=plan)
+    assert sel.n_interface == 0
+    jmesh = device_mesh(p)
+    mv, _ = make_sharded_matvec(sel, jmesh, c=1.0)      # overlap defaults on
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.random(m.n_verts).astype(np.float32))
+    out = mv(plan.to_local(u))
+    ref = stiffness_matvec(el, u, c=1.0)
+    assert float(jnp.max(jnp.abs(plan.from_local(out) - ref))) < 1e-4
+
+
+@pytest.mark.parametrize("p", [2, 8])
+def test_owned_pcg_pallas_kernel_parity(p):
+    """Full PCG through the fused element kernel (its XLA twin off-TPU):
+    same solution as the geometry-oracle solve."""
+    from repro.fem.parallel import (device_mesh, shard_elements,
+                                    sharded_solve_dirichlet)
+    m = _random_refined_mesh(90 + p)
+    el = build_elements(m.verts, m.tets)
+    parts = _partition(m, p)
+    plan = build_halo_plan(m.tets, parts, m.n_verts, p)
+    jmesh = device_mesh(p)
+    sel = shard_elements(el, parts, p, halo=plan)
+
+    from repro.fem.problems import get_problem
+    prob = get_problem("helmholtz").make()
+    verts = jnp.asarray(m.verts)
+    free = np.ones(m.n_verts)
+    free[m.boundary_vertices()] = 0.0
+    free = jnp.asarray(free)
+    rhs = load_vector(el, verts, prob.f)
+    g = prob.exact(verts)
+    ref = sharded_solve_dirichlet(sel, jmesh, rhs, g, free, prob.c,
+                                  tol=1e-8, use_pallas=False)
+    serial = sharded_solve_dirichlet(sel, jmesh, rhs, g, free, prob.c,
+                                     tol=1e-8, overlap=False,
+                                     use_pallas=False)
+    got = sharded_solve_dirichlet(sel, jmesh, rhs, g, free, prob.c,
+                                  tol=1e-8, use_pallas=True)
+    assert float(jnp.max(jnp.abs(serial.x - ref.x))) < 1e-5
+    assert float(jnp.max(jnp.abs(got.x - ref.x))) < 1e-5
+    assert int(got.iters) <= int(ref.iters) + 10
+
+
+def test_measure_matvec_phases_records_spans():
+    from repro import telemetry
+    from repro.fem.parallel import (device_mesh, measure_matvec_phases,
+                                    shard_elements)
+    p = 4
+    m = _random_refined_mesh(31, levels=1)
+    el = build_elements(m.verts, m.tets)
+    parts = _partition(m, p)
+    plan = build_halo_plan(m.tets, parts, m.n_verts, p)
+    sel = shard_elements(el, parts, p, halo=plan)
+    with telemetry.tracing(telemetry.Tracer()) as tr:
+        t_if, t_int = measure_matvec_phases(sel, device_mesh(p), 1.0, step=3)
+    assert t_if > 0 and t_int > 0
+    byname = {e.name: e for e in tr.events}
+    assert byname["fem/matvec_interface"].attrs["step"] == 3
+    assert byname["fem/matvec_interface"].attrs["n_interface"] \
+        == sel.n_interface
+    assert byname["fem/matvec_interior"].attrs["n_interior"] \
+        == sel.tets.shape[1] - sel.n_interface
+
+
+def test_halo_bytes_follow_solve_itemsize():
+    """The wire model is dtype-aware: doubling the itemsize doubles both
+    byte figures (the adaptive session passes the actual solve dtype's
+    itemsize instead of assuming f32)."""
+    m = _random_refined_mesh(37, levels=1)
+    p = 4
+    parts = _partition(m, p)
+    plan = build_halo_plan(m.tets, parts, m.n_verts, p)
+    assert plan.halo_bytes(itemsize=8) == 2 * plan.halo_bytes()
+    assert plan.psum_bytes(itemsize=8) == 2 * plan.psum_bytes()
+
+
 def test_halo_bytes_scale_with_cut_not_mesh_size():
     """Refining the mesh under a fixed part count grows psum bytes like
     n_verts but halo bytes like the cut surface (~ volume^(2/3)): at 7x

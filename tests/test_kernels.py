@@ -5,13 +5,16 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.fem_matvec import (fem_element_matrices, fem_matvec_jnp,
+                                      fem_matvec_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ksection_hist import (ksection_histogram_jnp,
                                          ksection_histogram_pallas)
 from repro.kernels.prefix_scan import exclusive_scan_pallas
 from repro.kernels.sfc_keys import sfc_keys_pallas
-from repro.kernels.ops import (exclusive_scan_op, flash_attention_op,
-                               ksection_histogram_op, sfc_keys_op)
+from repro.kernels.ops import (exclusive_scan_op, fem_matvec_op,
+                               flash_attention_op, ksection_histogram_op,
+                               sfc_keys_op)
 
 RNG = np.random.default_rng(0)
 
@@ -142,6 +145,85 @@ def test_ksection_hist_op_dispatch():
     got = ksection_histogram_op(keys, w, cuts, use_pallas=True,
                                 interpret=True)
     assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# --- fem_matvec ------------------------------------------------------------
+# Random "elements": slot ids in [0, V), random SPD-ish geometry, plus
+# padding rows (slot n_out, zero grads/vol) exactly like the owned packing.
+
+def _fem_case(C, V, seed=0, pad_frac=0.2, c=1.0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    n_pad = int(C * pad_frac)
+    n = C - n_pad
+    tets = rng.integers(0, V, (n, 4)).astype(np.int32)
+    grads = rng.standard_normal((n, 4, 3)).astype(dtype)
+    vol = (rng.random(n).astype(dtype) + 0.1)
+    if n_pad:
+        tets = np.concatenate([tets, np.full((n_pad, 4), V, np.int32)])
+        grads = np.concatenate([grads, np.zeros((n_pad, 4, 3), dtype)])
+        vol = np.concatenate([vol, np.zeros(n_pad, dtype)])
+    u = rng.standard_normal(V + 1).astype(dtype)   # V slots + pad slot
+    return (jnp.asarray(tets), jnp.asarray(grads), jnp.asarray(vol),
+            jnp.asarray(u), V, c)
+
+
+@pytest.mark.parametrize("C,V", [(1024, 256), (333, 100), (2048, 640),
+                                 (7, 5), (256, 1)])
+@pytest.mark.parametrize("c", [0.0, 1.0])
+def test_fem_matvec_kernel(C, V, c):
+    """Pallas kernel (interpret) vs geometry oracle over shapes including
+    non-multiple-of-block C, tiny V, and padded element rows."""
+    tets, grads, vol, u, n_out, _ = _fem_case(C, V, seed=C + int(c), c=c)
+    kel = fem_element_matrices(grads, vol, c)
+    got = fem_matvec_pallas(tets, kel, u, n_out, interpret=True)
+    want = ref.fem_matvec_ref(tets, grads, vol, u, n_out, c=c)
+    scale = float(jnp.max(jnp.abs(want))) + 1.0
+    assert got.shape == (n_out,)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-4 * scale
+
+
+def test_fem_matvec_jnp_twin_matches_ref():
+    """The off-TPU fused-XLA twin agrees with the oracle (it is the
+    production use_pallas=True CPU path)."""
+    tets, grads, vol, u, n_out, c = _fem_case(1536, 400, seed=9)
+    kel = fem_element_matrices(grads, vol, c)
+    got = fem_matvec_jnp(tets, kel, u, n_out)
+    want = ref.fem_matvec_ref(tets, grads, vol, u, n_out, c=c)
+    scale = float(jnp.max(jnp.abs(want))) + 1.0
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-4 * scale
+
+
+def test_fem_matvec_empty_and_padding_invisible():
+    """C=0 returns zeros; all-padding rows contribute exactly nothing."""
+    u = jnp.asarray(RNG.standard_normal(65).astype(np.float32))
+    kel0 = jnp.zeros((0, 4, 4), jnp.float32)
+    out = fem_matvec_pallas(jnp.zeros((0, 4), jnp.int32), kel0, u, 64,
+                            interpret=True)
+    assert out.shape == (64,) and not np.asarray(out).any()
+    tets = jnp.full((96, 4), 64, jnp.int32)        # every row -> pad slot
+    kel = jnp.zeros((96, 4, 4), jnp.float32)
+    out = fem_matvec_pallas(tets, kel, u, 64, interpret=True)
+    assert not np.asarray(out).any()
+
+
+def test_fem_matvec_op_dispatch():
+    """use_pallas=False is bit-identical to the oracle; use_pallas=True +
+    interpret runs the kernel through the Pallas interpreter; the default
+    CPU twin path also lands within tolerance -- all through one op."""
+    tets, grads, vol, u, n_out, c = _fem_case(512, 200, seed=4)
+    want = ref.fem_matvec_ref(tets, grads, vol, u, n_out, c=c)
+    got = fem_matvec_op(tets, grads, vol, u, n_out, c=c, use_pallas=False)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    scale = float(jnp.max(jnp.abs(want))) + 1.0
+    for kw in (dict(interpret=True), dict()):
+        got = fem_matvec_op(tets, grads, vol, u, n_out, c=c,
+                            use_pallas=True, **kw)
+        assert float(jnp.max(jnp.abs(got - want))) < 1e-4 * scale
+    # precomputed element matrices short-circuit identically
+    kel = fem_element_matrices(grads, vol, c)
+    got = fem_matvec_op(tets, grads, vol, u, n_out, c=c, kel=kel,
+                        use_pallas=True)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-4 * scale
 
 
 @pytest.mark.parametrize(
