@@ -1,13 +1,21 @@
-"""Serving-engine sweep: latency/throughput vs KV rebalance cadence.
+"""Serving-engine sweep: rebalance cadence + prefill admission modes.
 
 The serving claim mirrors the paper's: periodic repartition + minimal
 migration keeps per-group load (here: live KV bytes) balanced at a cost
-that is small next to the work it saves.  This sweep drives the sharded
-slot engine (``prefill='full'``, ``decode='sharded'``,
-``rebalance='kv'``) with one seeded bursty trace per ``rebalance_every``
-cadence -- plus a ``rebalance='never'`` control -- and reports
-throughput, p50/p99 TTFT and ITL, and the per-rebalance
-``moved_kv_bytes`` next to TotalV/imbalance.
+that is small next to the work it saves.  Two sweeps:
+
+* rebalance cadence -- drives the sharded slot engine
+  (``prefill='full'``, ``decode='sharded'``, ``rebalance='kv'``) with one
+  seeded bursty trace per ``rebalance_every`` cadence plus a
+  ``rebalance='never'`` control, reporting throughput, p50/p99 TTFT and
+  ITL, and per-rebalance ``moved_kv_bytes`` next to TotalV/imbalance.
+* prefill admission -- the packed-prefill columns
+  ``prefill/{per_request,packed,packed_pallas}`` on a mixed-length bursty
+  trace (7 prompt buckets, so the per-request path retraces 7 programs
+  while packed traces ONE): an admission-only burst times prompt
+  tokens/s through each path, and a full trace run reports end-to-end
+  throughput and the live compile count.  First output tokens are
+  cross-checked identical across modes (the packed parity bar).
 
 Needs >= groups JAX devices (CI forces 8 simulated host devices via
 XLA_FLAGS); groups is clamped to the devices available.
@@ -19,16 +27,23 @@ Standalone:
 """
 import argparse
 import json
+import time
 
 import jax
 
 from repro.configs import get_smoke
 from repro.core import BalanceSpec
 from repro.models import init_model
-from repro.serve import ServeSession, ServeSpec, bursty_trace, run_trace
+from repro.serve import (Request, ServeSession, ServeSpec, bursty_trace,
+                         run_trace)
 
 REBALANCE_SWEEP = (4, 8, 16, 32)
 QUICK_SWEEP = (4, 16)
+PREFILL_MODES = ("per_request", "packed", "packed_pallas")
+# 7 distinct (post-snap) prompt lengths: the per-request path compiles
+# one program per bucket, packed compiles one total
+PREFILL_BUCKETS = (3, 5, 7, 9, 11, 13, 15)
+PAGE_SIZE = 4
 
 
 def _session(params, cfg, groups, slots, max_seq, rebalance_every, mode):
@@ -41,13 +56,55 @@ def _session(params, cfg, groups, slots, max_seq, rebalance_every, mode):
     return ServeSession(params, cfg, spec)
 
 
-def run(quick=False, sweep=None):
+def _prefill_spec(groups, slots, max_seq, mode, interpret):
+    kw = dict(slots=slots, groups=groups, max_seq=max_seq,
+              rebalance_every=10 ** 6, rebalance="never", decode="sharded",
+              balance=BalanceSpec(p=groups, method="linear", oneD="ksection",
+                                  warm_start=True))
+    if mode == "per_request":
+        return ServeSpec(prefill="full", **kw)
+    if mode == "packed":
+        return ServeSpec(prefill="packed", page_size=PAGE_SIZE,
+                         use_pallas=False, **kw)
+    if mode == "packed_pallas":
+        # off-TPU this runs the fused jnp twin (or the Pallas interpreter
+        # with --interpret, which times the emulator, not the op)
+        return ServeSpec(prefill="packed", page_size=PAGE_SIZE,
+                         use_pallas=True, interpret=interpret, **kw)
+    raise ValueError(mode)
+
+
+def _admission_burst(params, cfg, spec, trace):
+    """Time ONLY the admission path: submit the whole trace as a burst of
+    max_new=1 requests (each finishes at admit, so slots recycle and the
+    queue drains in one ``_admit``) and measure prompt tokens/s."""
+    sess = ServeSession(params, cfg, spec)
+    reqs = [Request(rid=t.rid, prompt=t.prompt, max_new=1) for t in trace]
+    for r in reqs:
+        sess.submit(r)
+    t0 = time.perf_counter()
+    sess._admit()
+    wall = time.perf_counter() - t0
+    assert not sess.queue, "admission burst left queued requests"
+    toks = sess.prefill_stats["tokens"]
+    return {
+        "wall_s": wall,
+        "admission_tok_s": toks / wall if wall > 0 else float("nan"),
+        "compiles": sess.compile_count(),
+        "prefill_calls": sess.prefill_stats["calls"],
+        "fill_frac": toks / max(sess.prefill_stats["buffer_tokens"], 1),
+        "first_tokens": {r.rid: r.out[0] for r in reqs},
+    }
+
+
+def run(quick=False, sweep=None, groups=None, interpret=False):
     if sweep is None:
         sweep = QUICK_SWEEP if quick else REBALANCE_SWEEP
     cfg = get_smoke("llama3_8b").replace(n_layers=2, d_model=128, n_heads=4,
                                          n_kv_heads=2, head_dim=32, d_ff=256)
     params = init_model(cfg, jax.random.PRNGKey(0))
-    groups = min(4, len(jax.devices()))
+    if groups is None:
+        groups = min(4, len(jax.devices()))
     slots = 2 * groups
     max_seq = 64 if quick else 128
     n_req = 16 if quick else 48
@@ -83,9 +140,61 @@ def run(quick=False, sweep=None):
                                    "moved_kv_bytes", "n_moved", "deferred")}
                 for e in m["migration_log"]],
         })
+
+    # -- prefill admission sweep: per_request vs packed vs packed_pallas --
+    n_preq = 24 if quick else 64
+    ptrace = bursty_trace(n_preq, seed=1, vocab=cfg.vocab,
+                          prompt_buckets=PREFILL_BUCKETS,
+                          max_new_cap=8 if quick else 16)
+    precs, first_tokens = [], {}
+    for mode in PREFILL_MODES:
+        spec = _prefill_spec(groups, slots, max_seq, mode, interpret)
+        burst = _admission_burst(params, cfg, spec, ptrace)
+        first_tokens[mode] = burst.pop("first_tokens")
+        sess = ServeSession(params, cfg, spec)
+        m = run_trace(sess, ptrace, max_steps=4096)
+        assert m["completed"] == m["requests"], (mode, m)
+        rows.append((f"serve/prefill/{mode}/admission_tok_s",
+                     burst["admission_tok_s"], burst["compiles"]))
+        rows.append((f"serve/prefill/{mode}/throughput_tok_s",
+                     m["throughput_tok_s"], m["compiles"]))
+        precs.append({
+            "mode": mode,
+            "admission_tok_s": burst["admission_tok_s"],
+            "admission_wall_s": burst["wall_s"],
+            "admission_compiles": burst["compiles"],
+            "prefill_calls": burst["prefill_calls"],
+            "fill_frac": burst["fill_frac"],
+            "throughput_tok_s": m["throughput_tok_s"],
+            "compiles": m["compiles"],
+            "compiles_delta": m["compiles_delta"],
+            "ttft_p50_s": m["ttft_p50_s"], "ttft_p99_s": m["ttft_p99_s"],
+            "steps": m["steps"], "tokens": m["tokens"],
+        })
+    parity = all(first_tokens[m] == first_tokens["per_request"]
+                 for m in PREFILL_MODES)
+    assert parity, "packed prefill first tokens diverge from per_request"
+    by_mode = {r["mode"]: r for r in precs}
+    for mode in ("packed", "packed_pallas"):
+        assert (by_mode[mode]["admission_compiles"]
+                < by_mode["per_request"]["admission_compiles"]), \
+            (mode, "packed admission must compile strictly fewer programs")
+    speedup = (by_mode["packed"]["admission_tok_s"]
+               / by_mode["per_request"]["admission_tok_s"])
+    rows.append(("serve/prefill/packed_admission_speedup", speedup,
+                 int(parity)))
     record = {"bench": "serve", "backend": jax.default_backend(),
               "groups": groups, "slots": slots, "max_seq": max_seq,
-              "n_requests": n_req, "family": cfg.family, "sweep": recs}
+              "n_requests": n_req, "family": cfg.family, "sweep": recs,
+              "prefill": {
+                  "n_requests": n_preq,
+                  "prompt_buckets": list(PREFILL_BUCKETS),
+                  "page_size": PAGE_SIZE,
+                  "interpret": bool(interpret),
+                  "first_token_parity": bool(parity),
+                  "packed_admission_speedup": speedup,
+                  "modes": precs,
+              }}
     return rows, record
 
 
@@ -93,11 +202,18 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes for CI")
+    ap.add_argument("--groups", type=int, default=None,
+                    help="device groups (default: min(4, n_devices))")
+    ap.add_argument("--interpret", action="store_true",
+                    help="run the packed_pallas column under the Pallas "
+                         "interpreter (CI kernel coverage on CPU)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a BENCH_serve.json record to PATH")
     args = ap.parse_args()
     from repro import telemetry
-    (rows, record), tele = telemetry.capture(lambda: run(quick=args.quick))
+    (rows, record), tele = telemetry.capture(
+        lambda: run(quick=args.quick, groups=args.groups,
+                    interpret=args.interpret))
     print("name,us_per_call,derived")
     for row in rows:
         print(f"{row[0]},{row[1]:.1f},{row[2]}")

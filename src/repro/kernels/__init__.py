@@ -19,9 +19,13 @@ Kernels:
   fem_matvec       fused P1 element matvec (gather -> precomputed-4x4
                    apply -> scatter-accumulate as one-hot matmuls) --
                    the owned-layout FEM hot path's per-call element work
+  serve_prefill    segment-masked packed-prefill attention -- the serving
+                   engine's batched-admission hot loop (one launch over
+                   the fixed-capacity packed buffer, per-request causal
+                   bands via segment-range tile early-out)
 
 All validated in interpret mode on CPU (tests/test_kernels.py) over
 shape/dtype sweeps; compiled BlockSpecs target the TPU MXU/VPU layouts.
 """
 from .ops import (exclusive_scan_op, fem_matvec_op, flash_attention_op,
-                  ksection_histogram_op, sfc_keys_op)
+                  ksection_histogram_op, packed_attention_op, sfc_keys_op)

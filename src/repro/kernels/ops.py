@@ -20,6 +20,7 @@ from .fem_matvec import (BLOCK_C, fem_element_matrices, fem_matvec_jnp,
 from .flash_attention import flash_attention_pallas
 from .ksection_hist import ksection_histogram_pallas
 from .prefix_scan import exclusive_scan_pallas
+from .serve_prefill import packed_attention_jnp, packed_attention_pallas
 from .sfc_keys import sfc_keys_pallas
 
 _ON_TPU = jax.default_backend() == "tpu"
@@ -122,6 +123,35 @@ def fem_matvec_op(tets: jax.Array, grads: jax.Array, vol: jax.Array,
                                  interpret=interpret or not _ON_TPU,
                                  block=block)
     return fem_matvec_jnp(tets, kel, u, n_out)
+
+
+def packed_attention_op(q: jax.Array, k: jax.Array, v: jax.Array,
+                        seg: jax.Array, *, softcap: Optional[float] = None,
+                        scale: Optional[float] = None,
+                        use_pallas: Optional[bool] = None,
+                        interpret: bool = False,
+                        block: int = 128) -> jax.Array:
+    """Segment-masked causal attention over one packed prefill buffer.
+
+    q: (hq, C, d); k/v: (hkv, C, d) unexpanded (GQA folded per-impl);
+    seg: (C,) int32 request ids, -1 = pad.  Rows with no visible key
+    emit exactly 0 across all three implementations, so the serving
+    engine's parity bar (packed bit-identical on output tokens to
+    per-request prefill) holds regardless of backend.  Dispatch follows
+    ``fem_matvec_op``: ``use_pallas=False`` (the CPU default) runs the
+    oracle; the Pallas kernel runs compiled on TPU or under the
+    interpreter with ``interpret=True``; otherwise the fused-XLA twin
+    ``packed_attention_jnp`` serves off-TPU production use."""
+    if use_pallas is None:
+        use_pallas = _ON_TPU
+    if not use_pallas:
+        return _ref.packed_attention_ref(q, k, v, seg, softcap=softcap,
+                                         scale=scale)
+    if interpret or _ON_TPU:
+        return packed_attention_pallas(q, k, v, seg, softcap=softcap,
+                                       scale=scale, block=block,
+                                       interpret=interpret or not _ON_TPU)
+    return packed_attention_jnp(q, k, v, seg, softcap=softcap, scale=scale)
 
 
 def flash_attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,

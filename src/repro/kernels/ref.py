@@ -94,3 +94,37 @@ def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhij,bhjd->bhid", p, vq.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+# --- serve_prefill ---------------------------------------------------------
+
+def packed_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         seg: jax.Array, *, softcap: float | None = None,
+                         scale: float | None = None) -> jax.Array:
+    """Segment-masked causal attention over one packed prefill buffer.
+
+    q: (hq, C, d); k/v: (hkv, C, d); seg: (C,) int32 request ids with
+    -1 = pad.  Key j is visible from query i iff j <= i AND
+    seg[i] == seg[j] >= 0 -- within-request causal, zero cross-request
+    leakage.  Rows whose segment is -1 (or with no visible key) emit
+    exactly 0, so whole-buffer comparisons are well defined.  fp32
+    softmax; GQA via repeat like ``mha_ref``."""
+    hq, C, d = q.shape
+    group = hq // k.shape[0]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kq = jnp.repeat(k, group, axis=0)
+    vq = jnp.repeat(v, group, axis=0)
+    logits = jnp.einsum("hid,hjd->hij", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    i = jnp.arange(C)
+    mask = ((i[None, :] <= i[:, None]) & (seg[:, None] == seg[None, :])
+            & (seg[:, None] >= 0))
+    logits = jnp.where(mask[None], logits, -1e30)
+    p = jnp.where(mask[None], jax.nn.softmax(logits, axis=-1), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hij,hjd->hid", p, vq.astype(jnp.float32))
+    out = jnp.where(l > 0.0, out, 0.0)
+    return out.astype(q.dtype)

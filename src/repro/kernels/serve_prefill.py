@@ -1,0 +1,190 @@
+"""Pallas TPU kernel: segment-masked packed-prefill attention.
+
+The serving engine's packed admission concatenates every request admitted
+in a step into one fixed-capacity token buffer; attention over that
+buffer must stay request-local (no cross-request leakage) and causal
+within each request.  This kernel is the buffer's hot loop -- one launch
+per layer instead of one traced program per prompt-length bucket:
+
+* grid (q_heads, C/B, C/B); the last grid dim runs sequentially on TPU,
+  so VMEM scratch (acc, m, l) carries the running online-softmax state
+  across KV tiles exactly like ``flash_attention.py``.
+* the per-segment gather is the mask: segment ids ride in as (C, 1) and
+  (1, C) int32 operands so each (B, B) tile compares its q-rows' segment
+  against its k-columns' segment with one broadcast -- tokens of other
+  requests (and pad tokens, segment -1) contribute exp(-inf) = 0.
+* tile early-out: a KV tile above the causal diagonal, or whose real
+  segment range is disjoint from the q tile's, is skipped entirely
+  (``pl.when``) -- the packed buffer is segment-sorted, so most
+  off-diagonal tiles skip and the work approaches sum of per-request
+  causal bands rather than C^2.
+* GQA folded into the BlockSpec index map (query head h reads kv head
+  h // group), no materialized K/V repeat.
+* fully masked rows (pad tokens) emit exactly 0 -- the contract shared
+  with ``ref.packed_attention_ref`` and the jnp twin, so parity checks
+  can compare whole buffers.
+
+``packed_attention_jnp`` is the fused-XLA twin for off-TPU production
+use (interpret mode times the Pallas emulator, not the op); the oracle
+lives in ``kernels.ref.packed_attention_ref`` and the dispatch in
+``kernels.ops.packed_attention_op``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 128
+NEG_INF = -1e30
+_BIG_SEG = 2 ** 30
+
+
+def _packed_kernel(q_ref, k_ref, v_ref, sq_ref, skt_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float,
+                   softcap: Optional[float], blk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    sq = sq_ref[...]                                    # (blk, 1) int32
+    skt = skt_ref[...]                                  # (1, blk)
+    # early-out: skip tiles above the causal diagonal (blk_q == blk_k) and
+    # tiles whose REAL (>= 0) segment ranges cannot intersect -- the
+    # packed buffer is segment-sorted, so this restricts work to the
+    # per-request causal bands
+    q_min = jnp.min(jnp.where(sq >= 0, sq, _BIG_SEG))
+    q_max = jnp.max(sq)
+    k_min = jnp.min(jnp.where(skt >= 0, skt, _BIG_SEG))
+    k_max = jnp.max(skt)
+    live = ((ik <= iq) & (q_max >= 0) & (k_max >= 0)
+            & (k_min <= q_max) & (q_min <= k_max))
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32) * scale        # (blk, d)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        rows = iq * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+        cols = ik * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+        mask = (cols <= rows) & (sq == skt) & (sq >= 0)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        # a fully masked ROW inside a live tile: s = NEG_INF everywhere,
+        # m_new stays NEG_INF, p = exp(0) = 1 -- mask it out explicitly
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        out = jnp.where(l > 0.0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "scale", "block",
+                                             "interpret"))
+def packed_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            seg: jax.Array, *,
+                            softcap: Optional[float] = None,
+                            scale: Optional[float] = None,
+                            block: int = DEFAULT_BLOCK,
+                            interpret: bool = False) -> jax.Array:
+    """q: (hq, C, d); k/v: (hkv, C, d); seg: (C,) int32, -1 = pad.
+
+    Returns (hq, C, d); rows whose segment id is -1 are exactly zero.
+    Any C runs: the buffer is padded to a block multiple with segment -1
+    and sliced back."""
+    hq, C, d = q.shape
+    hkv = k.shape[0]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    blk = min(block, C + (-C) % 8)
+    pad = (-C) % blk
+    if pad:
+        zq = jnp.zeros((hq, pad, d), q.dtype)
+        q = jnp.concatenate([q, zq], axis=1)
+        zk = jnp.zeros((hkv, pad, d), k.dtype)
+        k = jnp.concatenate([k, zk], axis=1)
+        v = jnp.concatenate([v, zk.astype(v.dtype)], axis=1)
+        seg = jnp.concatenate([seg, jnp.full((pad,), -1, seg.dtype)])
+    n = C + pad
+    seg = seg.astype(jnp.int32)
+    seg_col = seg[:, None]                               # (n, 1)
+    seg_row = seg[None, :]                               # (1, n)
+
+    grid = (hq, n // blk, n // blk)
+    q_spec = pl.BlockSpec((1, blk, d), lambda ih, iq, ik: (ih, iq, 0))
+    kv_spec = pl.BlockSpec((1, blk, d),
+                           lambda ih, iq, ik: (ih // group, ik, 0))
+    sq_spec = pl.BlockSpec((blk, 1), lambda ih, iq, ik: (iq, 0))
+    skt_spec = pl.BlockSpec((1, blk), lambda ih, iq, ik: (0, ik))
+
+    out = pl.pallas_call(
+        functools.partial(_packed_kernel, scale=scale, softcap=softcap,
+                          blk=blk),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec, sq_spec, skt_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk, d), jnp.float32),
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, seg_col, seg_row)
+    return out[:, :C]
+
+
+def packed_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array,
+                         seg: jax.Array, *,
+                         softcap: Optional[float] = None,
+                         scale: Optional[float] = None) -> jax.Array:
+    """Fused-XLA twin of the kernel (same contract, off-TPU fast path)."""
+    hq, C, d = q.shape
+    group = hq // k.shape[0]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if group > 1:
+        k = jnp.repeat(k, group, axis=0)
+        v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hik,hjk->hij", q.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    i = jnp.arange(C)
+    mask = ((i[None, :] <= i[:, None]) & (seg[:, None] == seg[None, :])
+            & (seg[:, None] >= 0))
+    s = jnp.where(mask[None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask[None], jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hij,hjk->hik", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = jnp.where(l > 0.0, out / jnp.maximum(l, 1e-30), 0.0)
+    return out.astype(q.dtype)

@@ -8,10 +8,11 @@ arrival traces and the open-loop latency driver.
 """
 from .decode import (EncDecState, HybridState, KVCache, SSMState, decode_step,
                      init_decode_state, init_kv_cache, init_serve_state,
-                     prefill, reset_slot)
+                     packed_prefill, prefill, reset_slot)
 from .engine import Request, ServeEngine, ServeSession
-from .slots import (AXIS, SlotMigrator, build_serve_mesh, make_sharded_decode,
-                    slot_axes, slot_nbytes, slot_pspecs, write_slot)
+from .slots import (AXIS, SlotMigrator, build_serve_mesh, make_paged_insert,
+                    make_sharded_decode, slot_axes, slot_nbytes, slot_pspecs,
+                    write_slot)
 from .spec import (ServeSpec, get_serve_stage, register_serve_stage,
                    resolve_serve_variants, serve_stage_variants)
 from .trace import TraceRequest, bursty_trace, run_trace

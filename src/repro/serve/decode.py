@@ -22,11 +22,12 @@ import jax
 import jax.numpy as jnp
 
 from ..distributed.sharding import logical
+from ..kernels.ops import packed_attention_op
 from ..models import ModelConfig
 from ..models import transformer as T
 from ..models.transformer import _unroll
-from ..models.layers import (attention_apply, attention_decode, embed_tokens,
-                             mlp_apply, rmsnorm)
+from ..models.layers import (apply_rope, attention_apply, attention_decode,
+                             embed_tokens, mlp_apply, rmsnorm)
 from ..models.moe import moe_apply
 from ..models.rglru import (RGLRUCache, init_rglru_cache, rglru_block_apply,
                             rglru_block_decode)
@@ -167,6 +168,83 @@ def decoder_decode_step(params, cache: KVCache, tokens: jax.Array,
                         preferred_element_type=F32)
     cache = _write_slot(cache, ks, vs)
     return logits, cache
+
+
+def _packed_attention(lp, h: jax.Array, cfg: ModelConfig, pos: jax.Array,
+                      seg: jax.Array, *, use_pallas: Optional[bool],
+                      interpret: bool):
+    """``attention_apply``'s projection math over ONE packed buffer.
+
+    h: (1, C, d_model); pos: (1, C) within-segment positions (RoPE must
+    restart at 0 for every packed request); seg: (C,) request ids with
+    -1 = pad.  The attention core is ``kernels.ops.packed_attention_op``
+    (segment-masked causal) instead of the dense causal dispatch.
+    Returns (y, (k, v)) with k/v the rope'd unexpanded (hkv, C, hd)
+    entries for paged cache seeding."""
+    q = jnp.einsum("bsd,dhk->bhsk", h, lp["wq"].value,
+                   preferred_element_type=F32).astype(cfg.act_dtype)
+    k = jnp.einsum("bsd,dhk->bhsk", h, lp["wk"].value,
+                   preferred_element_type=F32).astype(cfg.act_dtype)
+    v = jnp.einsum("bsd,dhk->bhsk", h, lp["wv"].value,
+                   preferred_element_type=F32).astype(cfg.act_dtype)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    out = packed_attention_op(q[0], k[0], v[0], seg,
+                              softcap=cfg.attn_logit_softcap or None,
+                              use_pallas=use_pallas, interpret=interpret)
+    y = jnp.einsum("bhsk,hkd->bsd", out[None].astype(cfg.act_dtype),
+                   lp["wo"].value,
+                   preferred_element_type=F32).astype(cfg.act_dtype)
+    return y, (k[0], v[0])
+
+
+def packed_prefill(params, tokens: jax.Array, seg: jax.Array,
+                   pos: jax.Array, last_idx: jax.Array, cfg: ModelConfig, *,
+                   use_pallas: Optional[bool] = None,
+                   interpret: bool = False
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One forward over a packed multi-request prompt buffer.
+
+    tokens: (C,) the fixed-capacity packed buffer (pad = token 0, masked
+    by seg); seg: (C,) request ids, -1 = pad; pos: (C,) WITHIN-segment
+    positions; last_idx: (m,) buffer index of each request's last prompt
+    token.  C is ``ServeSpec.prefill_capacity`` -- a constant, so this
+    traces exactly once per spec regardless of prompt lengths (the 'full'
+    per-request path retraces per length bucket).
+
+    Returns (logits (m, vocab) f32, ks, vs) with ks/vs the rope'd
+    unexpanded per-layer K/V, (L, hkv, C, hd), for the paged slot
+    scatter (``slots.make_paged_insert``).  dense/moe/vlm layer stack
+    only -- recurrent state (ssm/hybrid) cannot be segment-masked inside
+    one scan, and mrope/SWA-ring models need position machinery this
+    buffer does not carry; ``ServeSession`` validates.  NOTE moe: expert
+    capacity couples tokens across the packed batch, so moe parity with
+    per-request prefill is tolerance-level, not bit-level (same caveat
+    as ``make_sharded_decode``)."""
+    x = embed_tokens(params["embed"], tokens[None], cfg)   # (1, C, d)
+    pos_b = pos[None]
+
+    def body(x, layer_params):
+        h = rmsnorm(x, layer_params["ln_attn"].value)
+        y, (k, v) = _packed_attention(layer_params["attn"], h, cfg, pos_b,
+                                      seg, use_pallas=use_pallas,
+                                      interpret=interpret)
+        x = x + y
+        h = rmsnorm(x, layer_params["ln_mlp"].value)
+        if "moe" in layer_params:
+            y, _ = moe_apply(layer_params["moe"], h, cfg)
+        else:
+            y = mlp_apply(layer_params["mlp"], h, cfg)
+        return x + y, (k, v)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(body_fn, x, params["layers"],
+                               unroll=_unroll(cfg))
+    x = rmsnorm(x, params["ln_f"].value)
+    xl = x[0, last_idx]                                    # (m, d)
+    logits = jnp.einsum("md,dv->mv", xl, params["embed"]["head"].value,
+                        preferred_element_type=F32)
+    return logits, ks.astype(cfg.act_dtype), vs.astype(cfg.act_dtype)
 
 
 # ---------------------------------------------------------------------------

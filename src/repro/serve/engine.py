@@ -40,11 +40,12 @@ import numpy as np
 
 from .. import deprecation, telemetry
 from ..core import Balancer, BalanceSpec
+from ..data.packing import first_fit_pack
 from ..models import ModelConfig
 from .decode import (decode_step, init_decode_state, init_serve_state,
-                     prefill, reset_slot)
-from .slots import (SlotMigrator, build_serve_mesh, make_sharded_decode,
-                    slot_axes, slot_nbytes, write_slot)
+                     packed_prefill, prefill, reset_slot)
+from .slots import (SlotMigrator, build_serve_mesh, make_paged_insert,
+                    make_sharded_decode, slot_axes, slot_nbytes, write_slot)
 from .spec import (ServeSpec, get_serve_stage, register_serve_stage,
                    resolve_serve_variants)
 
@@ -100,6 +101,53 @@ def _prefill_full(session: "ServeSession", req: Request):
     return tok, row, tok
 
 
+@register_serve_stage("prefill", "packed")
+def _prefill_packed(session: "ServeSession", admissions):
+    """Batched admission: ONE forward over all admitted prompts.
+
+    ``admissions`` is the host-planned seating, a list of
+    ``(req, slot, group, offset)`` with offsets page-aligned in the
+    fixed ``prefill_capacity`` buffer.  Builds the buffer (tokens,
+    segment ids, within-segment positions, last-token gather indices --
+    every array a spec constant shape, so this compiles ONCE per spec),
+    runs the segment-masked packed forward, scatters the emitted KV into
+    the admitted slots page-by-page, and seeds each slot's next decode
+    token.  Returns the first output token per admission."""
+    spec = session.spec
+    C, ps = spec.prefill_capacity, spec.page_size
+    tokens = np.zeros(C, np.int32)
+    seg = np.full(C, -1, np.int32)
+    pos = np.zeros(C, np.int32)
+    last_idx = np.zeros(spec.max_packed_requests, np.int32)
+    page_slot = np.full(spec.prefill_pages, -1, np.int32)
+    page_dst = np.zeros(spec.prefill_pages, np.int32)
+    written = np.zeros(spec.total_slots, bool)
+    slen = np.zeros(spec.total_slots, np.int32)
+    for sid, (req, slot, _, off) in enumerate(admissions):
+        s = len(req.prompt)
+        tokens[off:off + s] = np.asarray(req.prompt)
+        seg[off:off + s] = sid
+        pos[off:off + s] = np.arange(s)
+        last_idx[sid] = off + s - 1
+        npages = -(-s // ps)
+        page_slot[off // ps:off // ps + npages] = slot
+        page_dst[off // ps:off // ps + npages] = np.arange(npages)
+        written[slot] = True
+        slen[slot] = s
+    logits, ks, vs = session._packed_prefill_jit(
+        session.params, jnp.asarray(tokens), jnp.asarray(seg),
+        jnp.asarray(pos), jnp.asarray(last_idx))
+    session.state = session._paged_insert(
+        session.state, ks, vs, jnp.asarray(page_slot),
+        jnp.asarray(page_dst), jnp.asarray(written), jnp.asarray(slen))
+    first = [int(t) for t in
+             np.asarray(jnp.argmax(logits[:len(admissions)], axis=-1))]
+    slots = jnp.asarray([slot for _, slot, _, _ in admissions])
+    session.tokens = session.tokens.at[slots, 0].set(
+        jnp.asarray(first, jnp.int32))
+    return first
+
+
 @register_serve_stage("insert", "slot")
 def _insert_slot(session: "ServeSession", req: Request, slot: int,
                  seed_tok: int, row) -> None:
@@ -138,22 +186,27 @@ def _rebalance_tags(session: "ServeSession") -> Optional[Dict]:
     res = session._balance(live)
     for (_, r), g in zip(live, np.asarray(res.parts)):
         r.group = int(g)
-    return session._log_entry(res, moved_kv_bytes=0, n_moved=0, deferred=0)
+    return session._log_entry(res, moved_kv_bytes=0, n_moved=0, deferred=0,
+                              deferred_retries=0)
 
 
 @register_serve_stage("rebalance", "kv")
 def _rebalance_kv(session: "ServeSession") -> Optional[Dict]:
     """The real thing: repartition, then migrate each moved request's KV
-    slot between groups with the all_to_all executor."""
+    slot between groups with the all_to_all executor.  Movers deferred
+    by the previous rebalance (destination full) are retried FIRST this
+    round; ``deferred_retries`` counts the ones that landed."""
     live = session._live()
     if len(live) < 2:
         return None
     res = session._balance(live)
-    moves, deferred = session._plan_moves(live, np.asarray(res.parts))
+    moves, deferred, retried = session._plan_moves(live,
+                                                   np.asarray(res.parts))
     stats = session._apply_moves(moves)
     return session._log_entry(
         res, moved_kv_bytes=int(stats["moved_bytes"]),
-        n_moved=len(moves), deferred=deferred)
+        n_moved=len(moves), deferred=len(deferred),
+        deferred_retries=retried)
 
 
 # ---------------------------------------------------------------------------
@@ -178,7 +231,7 @@ class ServeSession:
         self.tracer = tracer
         self._variants = resolve_serve_variants(spec)
         total = spec.total_slots
-        if spec.prefill == "full":
+        if spec.prefill in ("full", "packed"):
             self.state = init_serve_state(cfg, total, spec.max_seq)
         else:
             # the dry-run-filled state: the cheap oracle's historical
@@ -210,6 +263,41 @@ class ServeSession:
         self._prefill_jit = jax.jit(
             lambda p, t: prefill(p, {"tokens": t}, cfg,
                                  max_seq=spec.max_seq))
+        self._packed_prefill_jit = None
+        self._paged_insert = None
+        if spec.prefill == "packed":
+            if cfg.family not in ("dense", "moe", "vlm"):
+                raise ValueError(
+                    f"prefill='packed' needs a KV-cache family (dense/moe/"
+                    f"vlm), got {cfg.family!r}: recurrent state cannot be "
+                    "segment-masked inside one packed forward")
+            if cfg.mrope_sections is not None:
+                raise ValueError(
+                    "prefill='packed' does not support mrope models (the "
+                    "packed buffer carries 1-D within-segment positions)")
+            S = spec.max_seq if cfg.window is None \
+                else min(cfg.window, spec.max_seq)
+            if S != spec.max_seq:
+                raise ValueError(
+                    f"prefill='packed' needs cache S == max_seq, got ring "
+                    f"S={S} (SWA window {cfg.window}): pages address "
+                    "absolute positions")
+            self._packed_prefill_jit = jax.jit(
+                lambda p, t, sg, ps, li: packed_prefill(
+                    p, t, sg, ps, li, cfg, use_pallas=spec.use_pallas,
+                    interpret=spec.interpret))
+            self._paged_insert = make_paged_insert(
+                cfg, self.mesh if spec.decode == "sharded" else None,
+                total_slots=total, page_size=spec.page_size,
+                capacity=spec.prefill_capacity)
+        # admission accounting (the trace driver's throughput + fill
+        # numbers): calls = jitted prefill launches, requests = admitted,
+        # tokens = real prompt tokens, buffer_tokens = traced buffer
+        # footprint (= tokens for per-request modes, capacity per call
+        # for packed -- tokens/buffer_tokens is the packed fill fraction)
+        self.prefill_stats: Dict[str, int] = {
+            "calls": 0, "requests": 0, "tokens": 0, "buffer_tokens": 0}
+        self._deferred_moves: Dict[int, int] = {}
         # resolved stage functions
         self._prefill = get_serve_stage("prefill", self._variants["prefill"])
         self._insert = get_serve_stage("insert", self._variants["insert"])
@@ -245,6 +333,10 @@ class ServeSession:
         self.queue.append(req)
 
     def _admit(self) -> None:
+        if self._variants["prefill"] == "packed":
+            while self._admit_packed_once():
+                pass
+            return
         while self.queue:
             # least-loaded group with a free usable slot (lowest id ties)
             cands = [(self._group_load(g), g, free[0])
@@ -259,6 +351,10 @@ class ServeSession:
                 seed_tok, row, first_tok = self._prefill(self, req)
                 self._insert(self, req, slot, seed_tok, row)
                 sp.block_on([x for x in (seed_tok, row) if x is not None])
+            self.prefill_stats["calls"] += 1
+            self.prefill_stats["requests"] += 1
+            self.prefill_stats["tokens"] += len(req.prompt)
+            self.prefill_stats["buffer_tokens"] += len(req.prompt)
             req.slot, req.group = slot, g
             if first_tok is not None:       # full prefill emits token 1
                 now = time.perf_counter()
@@ -270,6 +366,82 @@ class ServeSession:
                 req.slot = None
                 continue                    # slot stays free
             self.active[slot] = req
+
+    def _admit_packed_once(self) -> bool:
+        """Pack one buffer's worth of queued requests and admit them in a
+        single prefill call.  Returns True if anything was admitted (the
+        caller loops -- a long queue drains several packs per step as
+        long as slots are free)."""
+        if not self.queue:
+            return False
+        spec = self.spec
+        cap, ps = spec.prefill_capacity, spec.page_size
+        for req in self.queue:              # un-admittable = caller error
+            s = len(req.prompt)
+            if s + req.max_new > spec.max_seq:
+                raise ValueError(
+                    f"request {req.rid}: prompt ({s}) + max_new "
+                    f"({req.max_new}) exceeds max_seq ({spec.max_seq})")
+            if -(-s // ps) * ps > cap:
+                raise ValueError(
+                    f"request {req.rid}: prompt ({s}, page-aligned "
+                    f"{-(-s // ps) * ps}) exceeds prefill_capacity ({cap})")
+        free = {g: self._free_slots(g) for g in range(spec.groups)}
+        n_free = sum(len(f) for f in free.values())
+        if n_free == 0:
+            return False
+        chosen, offsets, _ = first_fit_pack(
+            [len(r.prompt) for r in self.queue], cap, align=ps,
+            max_items=min(n_free, spec.max_packed_requests))
+        if not chosen:
+            return False
+        # seat each packed request: least-loaded group with a free slot,
+        # load tracked across the round so one burst spreads out
+        load = {g: self._group_load(g) for g in range(spec.groups)}
+        admissions = []
+        for idx, off in zip(chosen, offsets):
+            req = self.queue[idx]
+            _, g = min((load[g], g) for g in range(spec.groups) if free[g])
+            slot = free[g].pop(0)
+            load[g] += req.kv_weight()
+            admissions.append((req, slot, g, off))
+        with self._tr().span("serve/prefill", block=True, variant="packed",
+                             n=len(admissions)) as sp:
+            first = self._prefill(self, admissions)
+            sp.block_on(self.tokens)
+        for idx in sorted(chosen, reverse=True):
+            self.queue.pop(idx)
+        now = time.perf_counter()
+        for (req, slot, g, _), tok in zip(admissions, first):
+            req.slot, req.group = slot, g
+            req.out.append(tok)
+            req.t_first = now
+            req.t_tokens.append(now)
+            if len(req.out) >= req.max_new:
+                req.done, req.t_done = True, now
+                req.slot = None             # slot stays free
+            else:
+                self.active[slot] = req
+        n_tok = sum(len(r.prompt) for r, _, _, _ in admissions)
+        self.prefill_stats["calls"] += 1
+        self.prefill_stats["requests"] += len(admissions)
+        self.prefill_stats["tokens"] += n_tok
+        self.prefill_stats["buffer_tokens"] += cap
+        tr = self._tr()
+        if tr.enabled:
+            tr.metrics.counter(
+                "prefill_tokens_packed", unit="tokens",
+                help="prompt tokens admitted through the packed prefill "
+                     "buffer").inc(n_tok)
+            tr.metrics.gauge(
+                "prefill_fill_frac",
+                help="fill fraction of the last packed prefill buffer "
+                     "(prompt tokens / prefill_capacity)").set(n_tok / cap)
+            tr.metrics.gauge(
+                "compile_count",
+                help="live traced-program count across the session's "
+                     "jitted callables").set(self.compile_count())
+        return True
 
     # -- rebalancing ---------------------------------------------------------
     def _balance(self, live):
@@ -288,25 +460,38 @@ class ServeSession:
         entry.update(extra)
         return entry
 
-    def _plan_moves(self, live, parts) -> Tuple[List[Tuple[int, int]], int]:
+    def _plan_moves(self, live, parts
+                    ) -> Tuple[List[Tuple[int, int]], Dict[int, int], int]:
         """Greedy move plan: heaviest movers first, a vacated source slot
         re-enters its group's free pool so chains resolve in one round.
-        Movers whose destination group has no free slot are deferred to a
-        later rebalance (counted, never silently dropped)."""
+        Movers whose destination group has no free slot are deferred to
+        the NEXT rebalance: they are recorded in ``_deferred_moves`` and
+        get first pick of destination slots when they still need to move
+        next round (never silently dropped).  Returns
+        ``(moves, deferred, retried)`` -- the executed plan, this round's
+        new deferral map (rid -> wanted group), and how many previously
+        deferred movers landed this round."""
         free = {g: self._free_slots(g) for g in range(self.spec.groups)}
         movers = [(slot, r, int(g)) for (slot, r), g in zip(live, parts)
                   if int(g) != r.group]
-        movers.sort(key=lambda t: (-t[1].kv_weight(), t[1].rid))
-        moves, deferred = [], 0
+        retry = self._deferred_moves
+        movers.sort(key=lambda t: (0 if t[1].rid in retry else 1,
+                                   -t[1].kv_weight(), t[1].rid))
+        moves: List[Tuple[int, int]] = []
+        deferred: Dict[int, int] = {}
+        retried = 0
         for slot, req, g in movers:
             if free[g]:
                 dst = free[g].pop(0)
                 moves.append((slot, dst))
+                if req.rid in retry:
+                    retried += 1
                 free[req.group].append(slot)
                 free[req.group].sort()
             else:
-                deferred += 1
-        return moves, deferred
+                deferred[req.rid] = g
+        self._deferred_moves = deferred
+        return moves, deferred, retried
 
     def _apply_moves(self, moves: List[Tuple[int, int]]) -> Dict[str, float]:
         """Execute a move plan: ship the KV slot rows through the
@@ -348,8 +533,30 @@ class ServeSession:
             {"step": self.step_count, "TotalV": req.kv_weight(),
              "imbalance": float("nan"), "retained": 0.0,
              "moved_kv_bytes": int(stats["moved_kv_bytes"]),
-             "n_moved": 1, "deferred": 0, "forced": True})
+             "n_moved": 1, "deferred": 0, "deferred_retries": 0,
+             "forced": True})
         return stats
+
+    # -- compile accounting --------------------------------------------------
+    def compile_count(self) -> int:
+        """Traced-program count across every jitted callable the session
+        owns (decode, prefills, paged insert, migrator, balancer
+        pipelines).  The packed-prefill claim -- admission cost O(1)
+        compiles per spec instead of O(prompt-length buckets) -- is
+        measured against this, not asserted."""
+        fns = [self._decode_jit, self._prefill_jit,
+               self._packed_prefill_jit, self._paged_insert,
+               getattr(self._migrator, "_fn", None)]
+        fns += list(getattr(self.balancer, "_jitted", {}).values())
+        n = 0
+        for f in fns:
+            if f is None:
+                continue
+            try:
+                n += int(f._cache_size())
+            except Exception:  # non-jit callable or API drift: count 0
+                continue
+        return n
 
     # -- the engine step -----------------------------------------------------
     def step(self) -> None:
@@ -387,6 +594,11 @@ class ServeSession:
                         help="KV-cache bytes physically migrated between "
                              "groups by rebalances").inc(
                                  int(entry.get("moved_kv_bytes", 0)))
+                    tr.metrics.counter(
+                        "deferred_retries",
+                        help="previously deferred KV migrations that "
+                             "landed on a later rebalance").inc(
+                                 int(entry.get("deferred_retries", 0)))
                     tr.tick(self.step_count)
 
     def run(self, max_steps: int = 512) -> None:

@@ -136,6 +136,85 @@ def make_sharded_decode(cfg: ModelConfig, mesh: Mesh, axes):
     return jax.jit(fn)
 
 
+def make_paged_insert(cfg: ModelConfig, mesh: Optional[Mesh], *,
+                      total_slots: int, page_size: int, capacity: int):
+    """One jitted page-granular scatter: packed-prefill KV -> many slots.
+
+    The packed prefill emits K/V for the whole buffer at once,
+    (L, hkv, C, hd) with C = capacity = n_pages * page_size, and every
+    admitted request occupies a page-aligned run of the buffer.  KV
+    pages are addressed ``(group, slot, page)``: buffer page p lands in
+    slot ``page_slot[p]`` at page index ``page_dst[p]`` (page_slot =
+    -1 keeps a pad page out of every slot).  One call seeds ALL admitted
+    slots -- inside a single shard_map region when ``mesh`` is given
+    (each group scatters only the pages targeting its local slots;
+    ``mode='drop'`` discards the rest), plain jit when replicated.
+
+    Per-slot metadata is set wholesale: ``written`` (total_slots,) bool
+    marks the admitted slots; ``slen`` (total_slots,) their prompt
+    lengths -- written slots get ``stored_pos = [0..slen) then -1`` and
+    ``pos = slen``.  Stale K/V beyond ``slen`` (and pages never written)
+    are harmless: ``attention_decode`` masks on stored_pos, which is the
+    same invariant the SWA ring layout already relies on -- that is why
+    paged partial writes stay bit-identical to the 'full' whole-row
+    insert at decode time.
+
+    KVCache (dense/moe/vlm) only; recurrent families have no paged
+    layout.  Requires cache S == max_seq (no SWA ring) and
+    S % page_size == 0 (``ServeSpec`` validates).
+    """
+    n_pages = capacity // page_size
+
+    def body(state: KVCache, pk, pv, page_slot, page_dst, written, slen,
+             base):
+        L, sl, hkv, S, hd = state.k.shape
+        sp_pages = S // page_size
+        # global slot id -> local row (out-of-range under shard_map ->
+        # sl, dropped by the scatter)
+        ls = jnp.where((page_slot >= base) & (page_slot < base + sl),
+                       page_slot - base, sl)
+        ls = jnp.where(page_slot >= 0, ls, sl)
+        k6 = state.k.reshape(L, sl, hkv, sp_pages, page_size, hd)
+        v6 = state.v.reshape(L, sl, hkv, sp_pages, page_size, hd)
+        # advanced indices (ls, page_dst) separated by slices -> indexed
+        # dims move to the FRONT: value must be (P, L, hkv, ps, hd)
+        pk_pages = jnp.moveaxis(
+            pk.reshape(L, hkv, n_pages, page_size, hd), 2, 0)
+        pv_pages = jnp.moveaxis(
+            pv.reshape(L, hkv, n_pages, page_size, hd), 2, 0)
+        k6 = k6.at[:, ls, :, page_dst].set(pk_pages, mode="drop")
+        v6 = v6.at[:, ls, :, page_dst].set(pv_pages, mode="drop")
+        wl = jax.lax.dynamic_slice(written, (base,), (sl,))
+        sll = jax.lax.dynamic_slice(slen, (base,), (sl,))
+        iota = jnp.arange(S, dtype=jnp.int32)[None]        # (1, S)
+        fresh = jnp.where(iota < sll[:, None], iota, -1)
+        sp = jnp.where(wl[:, None], fresh, state.stored_pos)
+        pos = jnp.where(wl, sll, state.pos)
+        return KVCache(k=k6.reshape(L, sl, hkv, S, hd),
+                       v=v6.reshape(L, sl, hkv, S, hd),
+                       stored_pos=sp, pos=pos)
+
+    if mesh is None:
+        return jax.jit(lambda state, *ops: body(state, *ops, jnp.int32(0)))
+
+    spg = total_slots // mesh.devices.size
+    sspec = slot_pspecs(_KV_AXES)
+
+    def sharded(state, pk, pv, page_slot, page_dst, written, slen):
+        base = jax.lax.axis_index(AXIS).astype(jnp.int32) * spg
+        return body(state, pk, pv, page_slot, page_dst, written, slen,
+                    base)
+
+    kw = dict(mesh=mesh,
+              in_specs=(sspec, P(), P(), P(), P(), P(), P()),
+              out_specs=sspec)
+    try:
+        fn = shard_map(sharded, check_rep=False, **kw)
+    except TypeError:
+        fn = shard_map(sharded, check_vma=False, **kw)
+    return jax.jit(fn)
+
+
 class SlotMigrator:
     """Ship KV slot rows between groups with the all_to_all executor.
 

@@ -19,9 +19,14 @@ the engine is declarative:
   a registered ``(stage, variant)`` function so new decode backends or
   rebalance policies register variants instead of forking the engine:
 
-      prefill   'full' (real prompt forward seeding the KV slot) |
+      prefill   'full' (real per-request prompt forward seeding the KV
+                slot -- one traced program per prompt length) |
                 'cheap' (seed only the last prompt token -- the fast
-                oracle for tests, the old engine's simulation mode)
+                oracle for tests, the old engine's simulation mode) |
+                'packed' (ALL requests admitted in a step concatenated
+                into one fixed-capacity buffer, one segment-ID-masked
+                prefill call, KV scattered into slot pages -- O(1)
+                compiles per spec; 'full' is its parity oracle)
       insert    'slot' (reset the freed slot, write the prefill cache)
       generate  'sharded' (one shard_map decode call over all groups,
                 KV slots live sharded on the group mesh) |
@@ -40,6 +45,10 @@ stage is jitted):
 
     prefill(session, req)                 -> (seed_token, row_state,
                                               first_token_or_None)
+    prefill 'packed' (batch admission)    -- (session, admissions) ->
+                                             [first_token, ...] with
+                                             admissions a list of
+                                             (req, slot, group, offset)
     insert(session, req, slot, seed, row) -> None   (mutates session)
     generate(session)                     -> logits (slots, 1, vocab)
     rebalance(session)                    -> log-entry dict or None
@@ -52,7 +61,7 @@ from typing import Callable, ClassVar, Dict, Mapping, Optional, Tuple
 from ..core.spec import BalanceSpec, Spec, register_spec_pytree
 
 SERVE_STAGES = ("prefill", "insert", "generate", "rebalance")
-PREFILL_MODES = ("full", "cheap")
+PREFILL_MODES = ("full", "cheap", "packed")
 DECODE_BACKENDS = ("sharded", "replicated")
 REBALANCE_MODES = ("kv", "tags", "never")
 
@@ -78,9 +87,34 @@ class ServeSpec(Spec):
                        that many JAX devices for ``decode='sharded'``
     max_seq            per-slot KV context budget (prompt + generated)
     rebalance_every    run the rebalance stage every N engine steps
-    prefill            'full' | 'cheap' (see module docstring); 'cheap'
-                       is the fast oracle -- it skips the prompt forward
-                       and seeds only the last prompt token
+    prefill            'full' | 'cheap' | 'packed' (see module docstring);
+                       'cheap' is the fast oracle -- it skips the prompt
+                       forward and seeds only the last prompt token.
+                       'packed' concatenates every request admitted in a
+                       step into ONE fixed-capacity token buffer, runs a
+                       single segment-ID-masked prefill forward, and
+                       scatters the KV into the slots page-by-page --
+                       prompt length never appears in a traced shape, so
+                       compile count is O(1) per spec instead of O(number
+                       of prompt-length buckets).  'full' stays the
+                       bit-identical-on-output-tokens parity oracle
+    prefill_capacity   'packed' only: token capacity of the packed
+                       prefill buffer (the ONE traced prompt shape).
+                       0 = auto (max_seq).  Must be a page_size multiple;
+                       a single prompt longer than this cannot be
+                       admitted
+    page_size          'packed' only: KV pages are addressed
+                       (group, slot, page) in page_size-token units; each
+                       packed request starts on a page boundary so every
+                       page lands in exactly one slot.  Must divide both
+                       max_seq and prefill_capacity
+    use_pallas         'packed' only: run the fused Pallas packed-prefill
+                       attention kernel (kernels/serve_prefill.py).
+                       None = auto: TPU only; True forces it (the fused
+                       jnp twin off-TPU, or the Pallas interpreter with
+                       ``interpret``); False keeps the jnp oracle
+    interpret          'packed' only: run the Pallas kernel under the
+                       interpreter (CI exercises the kernel on CPU)
     decode             'sharded' | 'replicated' generate-stage variant
     rebalance          'kv' | 'tags' | 'never' rebalance-stage variant;
                        'kv' physically migrates the per-request KV slot
@@ -98,6 +132,10 @@ class ServeSpec(Spec):
     max_seq: int = 256
     rebalance_every: int = 16
     prefill: str = "full"
+    prefill_capacity: int = 0
+    page_size: int = 8
+    use_pallas: Optional[bool] = None
+    interpret: bool = False
     decode: str = "sharded"
     rebalance: str = "kv"
     balance: Optional[BalanceSpec] = None
@@ -117,6 +155,27 @@ class ServeSpec(Spec):
         if self.prefill not in PREFILL_MODES:
             raise ValueError(f"unknown prefill mode {self.prefill!r}; "
                              f"choose from {PREFILL_MODES}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.prefill_capacity < 0:
+            raise ValueError("prefill_capacity must be >= 0 (0 = auto), "
+                             f"got {self.prefill_capacity}")
+        if self.use_pallas not in (None, True, False):
+            raise ValueError("use_pallas must be None (auto), True or "
+                             f"False, got {self.use_pallas!r}")
+        if self.prefill == "packed":
+            if self.prefill_capacity == 0:
+                object.__setattr__(self, "prefill_capacity", self.max_seq)
+            if self.max_seq % self.page_size:
+                raise ValueError(
+                    f"max_seq ({self.max_seq}) must be a multiple of "
+                    f"page_size ({self.page_size}): KV pages address "
+                    "(group, slot, page)")
+            if (self.prefill_capacity < self.page_size
+                    or self.prefill_capacity % self.page_size):
+                raise ValueError(
+                    f"prefill_capacity ({self.prefill_capacity}) must be a "
+                    f"positive multiple of page_size ({self.page_size})")
         if self.decode not in DECODE_BACKENDS:
             raise ValueError(f"unknown decode backend {self.decode!r}; "
                              f"choose from {DECODE_BACKENDS}")
@@ -159,6 +218,17 @@ class ServeSpec(Spec):
         """Global ids of the usable slots of group ``g``."""
         base = g * self.slots_per_group
         return range(base, base + self.group_quota(g))
+
+    # -- packed-prefill page topology ---------------------------------------
+    @property
+    def prefill_pages(self) -> int:
+        """Pages in the packed prefill buffer (capacity / page_size)."""
+        return self.prefill_capacity // self.page_size
+
+    @property
+    def max_packed_requests(self) -> int:
+        """Most requests one pack can hold (each occupies >= 1 page)."""
+        return self.prefill_pages
 
 
 # ---------------------------------------------------------------------------

@@ -104,7 +104,18 @@ def run_trace(session: ServeSession, trace: Sequence[TraceRequest], *,
       itl_p50/p99        inter-token latency within a request (seconds)
       steps, tokens      engine steps run / tokens generated
       rebalances         migration-log entries (incl. per-entry
-                         ``moved_kv_bytes``), totals alongside
+                         ``moved_kv_bytes`` / ``deferred_retries``),
+                         totals alongside
+      compiles           live traced programs across the session's jitted
+                         callables after the trace (compiles_delta = new
+                         traces DURING it; compile_log = (step, count) at
+                         every step that retraced) -- the packed
+                         prefill's O(1)-compiles claim is checked against
+                         this, per-step, not asserted
+      admission_tok_s    prompt tokens prefilled / wall seconds (the
+                         admission throughput the packed buffer speeds
+                         up); prefill_fill_frac is tokens over traced
+                         buffer footprint (1.0 for per-request modes)
     """
     if max_steps is None:
         max_steps = 64 * len(trace) + 256
@@ -118,6 +129,9 @@ def run_trace(session: ServeSession, trace: Sequence[TraceRequest], *,
             "moved_kv_bytes", unit="bytes",
             help="KV-cache bytes physically migrated between groups by "
                  "rebalances")
+    compiles0 = session.compile_count()
+    n_compiles = compiles0
+    compile_log: List[Dict] = []
     i, t0 = 0, time.perf_counter()
     with tracer.span("serve/run_trace", requests=len(trace)) as sp:
         for _ in range(max_steps):
@@ -130,10 +144,15 @@ def run_trace(session: ServeSession, trace: Sequence[TraceRequest], *,
                 session.submit(req)
                 i += 1
             session.step()
+            c = session.compile_count()
+            if c != n_compiles:
+                compile_log.append({"step": session.step_count,
+                                    "compiles": c})
+                n_compiles = c
             if (i == len(pending) and not session.queue
                     and all(r is None for r in session.active)):
                 break
-        sp.set(steps=session.step_count)
+        sp.set(steps=session.step_count, compiles=n_compiles)
     wall = time.perf_counter() - t0
 
     done = [r for r in requests if r.done]
@@ -153,6 +172,18 @@ def run_trace(session: ServeSession, trace: Sequence[TraceRequest], *,
         "itl_p50_s": _pct(itl, 50), "itl_p99_s": _pct(itl, 99),
         "rebalances": len(session.migration_log),
         "moved_kv_bytes_total": int(moved),
+        "deferred_retries_total": sum(
+            e.get("deferred_retries", 0) for e in session.migration_log),
         "migrated_requests": sum(r.migrations for r in requests),
         "migration_log": list(session.migration_log),
+        "compiles": n_compiles,
+        "compiles_delta": n_compiles - compiles0,
+        "compile_log": compile_log,
+        "prefill_calls": session.prefill_stats["calls"],
+        "admitted": session.prefill_stats["requests"],
+        "admission_tok_s": (session.prefill_stats["tokens"] / wall
+                            if wall > 0 else float("nan")),
+        "prefill_fill_frac": (
+            session.prefill_stats["tokens"]
+            / max(session.prefill_stats["buffer_tokens"], 1)),
     }

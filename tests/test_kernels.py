@@ -11,10 +11,12 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ksection_hist import (ksection_histogram_jnp,
                                          ksection_histogram_pallas)
 from repro.kernels.prefix_scan import exclusive_scan_pallas
+from repro.kernels.serve_prefill import (packed_attention_jnp,
+                                         packed_attention_pallas)
 from repro.kernels.sfc_keys import sfc_keys_pallas
 from repro.kernels.ops import (exclusive_scan_op, fem_matvec_op,
                                flash_attention_op, ksection_histogram_op,
-                               sfc_keys_op)
+                               packed_attention_op, sfc_keys_op)
 
 RNG = np.random.default_rng(0)
 
@@ -260,3 +262,91 @@ def test_ops_dispatch_to_ref_on_cpu():
     out = flash_attention_op(q, q, q, causal=True)
     want = ref.mha_ref(q, q, q, causal=True)
     assert float(jnp.max(jnp.abs(out - want))) == 0.0
+
+
+def _packed_case(lengths, C, hq, hkv, d):
+    """Random packed-prefill attention problem: `lengths` requests laid
+    back-to-back in a capacity-C buffer, tail padded with seg=-1."""
+    assert sum(lengths) <= C
+    q = jnp.asarray(RNG.standard_normal((hq, C, d)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((hkv, C, d)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((hkv, C, d)).astype(np.float32))
+    seg = np.full(C, -1, np.int32)
+    off = 0
+    for sid, ln in enumerate(lengths):
+        seg[off:off + ln] = sid
+        off += ln
+    return q, k, v, jnp.asarray(seg)
+
+
+@pytest.mark.parametrize(
+    "hq,hkv,d,C,lengths,softcap",
+    [(4, 4, 64, 256, (64, 96, 32), None),        # MHA, padded tail
+     (8, 2, 64, 256, (100, 60, 40, 56), None),   # GQA, full buffer
+     (4, 1, 64, 144, (48, 80), None),            # MQA, C not block-mult
+     (4, 2, 64, 256, (17, 3, 111, 64), 30.0)])   # softcap, ragged lens
+def test_packed_attention_kernel(hq, hkv, d, C, lengths, softcap):
+    q, k, v, seg = _packed_case(lengths, C, hq, hkv, d)
+    want = ref.packed_attention_ref(q, k, v, seg, softcap=softcap)
+    got_p = packed_attention_pallas(q, k, v, seg, softcap=softcap,
+                                    interpret=True)
+    got_j = packed_attention_jnp(q, k, v, seg, softcap=softcap)
+    assert float(jnp.max(jnp.abs(got_p - want))) < 2e-3
+    assert float(jnp.max(jnp.abs(got_j - want))) < 1e-4
+
+
+def test_packed_attention_pad_rows_exactly_zero():
+    """seg=-1 rows are outside every segment; all three implementations
+    must emit exactly zero there (the paged scatter never reads them,
+    but the contract keeps the parity check bitwise-meaningful)."""
+    q, k, v, seg = _packed_case((40, 24), 128, 4, 2, 64)
+    pad = np.asarray(seg) < 0
+    assert pad.any()
+    for out in (ref.packed_attention_ref(q, k, v, seg),
+                packed_attention_jnp(q, k, v, seg),
+                packed_attention_pallas(q, k, v, seg, interpret=True)):
+        assert float(jnp.max(jnp.abs(out[:, pad]))) == 0.0
+
+
+def test_packed_attention_matches_per_segment_mha():
+    """Each segment of the packed output equals causal MHA run on that
+    segment alone -- the packing is invisible to every request."""
+    lengths = (56, 8, 40, 24)
+    q, k, v, seg = _packed_case(lengths, 160, 4, 2, 64)
+    got = packed_attention_jnp(q, k, v, seg)
+    off = 0
+    for ln in lengths:
+        sl = slice(off, off + ln)
+        want = ref.mha_ref(q[None, :, sl], k[None, :, sl], v[None, :, sl],
+                           causal=True)[0]
+        err = float(jnp.max(jnp.abs(got[:, sl] - want)))
+        assert err < 1e-4, (sl, err)
+        off += ln
+
+
+def test_packed_attention_no_cross_segment_leakage():
+    """Perturbing one request's K/V must not change any OTHER request's
+    output at all -- the segment mask is the no-leakage guarantee."""
+    lengths = (48, 48, 32)
+    q, k, v, seg = _packed_case(lengths, 128, 4, 2, 64)
+    segn = np.asarray(seg)
+    k2 = jnp.where(jnp.asarray(segn == 1)[None, :, None], k * 13.0 + 7.0, k)
+    v2 = jnp.where(jnp.asarray(segn == 1)[None, :, None], v * -5.0, v)
+    others = jnp.asarray(segn != 1)
+    for fn in (lambda *a: ref.packed_attention_ref(*a),
+               lambda *a: packed_attention_jnp(*a),
+               lambda *a: packed_attention_pallas(*a, interpret=True)):
+        base, pert = fn(q, k, v, seg), fn(q, k2, v2, seg)
+        assert (base[:, others] == pert[:, others]).all()
+
+
+def test_packed_attention_op_dispatch():
+    """use_pallas=False (and the CPU default) run the oracle bit-identically;
+    use_pallas=True off-TPU runs the fused jnp twin."""
+    q, k, v, seg = _packed_case((60, 36), 128, 4, 2, 64)
+    want = ref.packed_attention_ref(q, k, v, seg)
+    assert (packed_attention_op(q, k, v, seg, use_pallas=False)
+            == want).all()
+    assert (packed_attention_op(q, k, v, seg) == want).all()
+    got = packed_attention_op(q, k, v, seg, use_pallas=True)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-4

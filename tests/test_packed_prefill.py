@@ -1,0 +1,105 @@
+"""Packed-prefill properties (hypothesis via the _propcheck shim):
+first-fit packing invariants against a literal greedy replay, and
+segment-masked packed attention == per-request causal attention on
+random mixed-length packs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro.data.packing import first_fit_pack
+from repro.kernels import ref
+from repro.kernels.serve_prefill import packed_attention_jnp
+
+RNG_ATT = np.random.default_rng(42)
+
+
+def _pad(ln, align):
+    return -(-ln // align) * align
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 32 - 1))
+def test_first_fit_pack_invariants(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 24))
+    lengths = rng.integers(1, 17, n).tolist()
+    align = int(rng.choice([1, 2, 4, 8]))
+    capacity = align * int(rng.integers(1, 17))
+    max_items = int(rng.integers(1, 12))
+    chosen, offsets, used = first_fit_pack(lengths, capacity, align=align,
+                                           max_items=max_items)
+    # basic shape: index lists line up, respect max_items and capacity
+    assert len(chosen) == len(offsets) <= max_items
+    assert 0 <= used <= capacity
+    assert used == sum(_pad(lengths[i], align) for i in chosen)
+    # every item sits whole (never split) at an aligned offset, inside
+    # the buffer, and no two packed items overlap
+    spans = sorted((off, off + _pad(lengths[i], align))
+                   for off, i in zip(offsets, chosen))
+    for off in offsets:
+        assert off >= 0 and off % align == 0
+    assert all(end <= capacity for _, end in spans)
+    for (_, a_end), (b_start, _) in zip(spans, spans[1:]):
+        assert a_end <= b_start
+    # exact first-fit semantics: greedy scan, skip what does not fit,
+    # stop at max_items -- a skipped item never blocks a later one
+    want_chosen, want_off, want_used = [], [], 0
+    for i, ln in enumerate(lengths):
+        if want_used + _pad(ln, align) > capacity:
+            continue
+        if len(want_chosen) >= max_items:
+            break
+        want_chosen.append(i)
+        want_off.append(want_used)
+        want_used += _pad(ln, align)
+    assert (chosen, offsets, used) == (want_chosen, want_off, want_used)
+
+
+def test_first_fit_pack_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        first_fit_pack([1, 2], 0)
+    with pytest.raises(ValueError, match="length"):
+        first_fit_pack([1, 0, 2], 8)
+    # items larger than the whole buffer are skipped, not fatal
+    chosen, offsets, used = first_fit_pack([9, 2, 9, 3], 4)
+    assert chosen == [1] and offsets == [0] and used == 2
+    # align rounds lengths UP before fitting
+    chosen, _, used = first_fit_pack([3, 3], 6, align=4)
+    assert chosen == [0] and used == 4
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 32 - 1))
+def test_packed_attention_matches_per_request(seed):
+    """Random packs: each segment of the packed output equals causal MHA
+    over that request alone, and seg=-1 padding rows are exactly zero --
+    the no-leakage property behind the engine's bit-parity bar."""
+    rng = np.random.default_rng(seed)
+    C, hq, hkv, d = 64, 4, 2, 16
+    lengths = []
+    while True:
+        ln = int(rng.integers(1, 17))
+        if sum(lengths) + ln > C or len(lengths) >= 8:
+            break
+        lengths.append(ln)
+    seg = np.full(C, -1, np.int32)
+    off = 0
+    for sid, ln in enumerate(lengths):
+        seg[off:off + ln] = sid
+        off += ln
+    q = jnp.asarray(rng.standard_normal((hq, C, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((hkv, C, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((hkv, C, d)).astype(np.float32))
+    got = packed_attention_jnp(q, k, v, jnp.asarray(seg))
+    oracle = ref.packed_attention_ref(q, k, v, jnp.asarray(seg))
+    assert float(jnp.max(jnp.abs(got - oracle))) < 1e-4
+    off = 0
+    for ln in lengths:
+        sl = slice(off, off + ln)
+        want = ref.mha_ref(q[None, :, sl], k[None, :, sl],
+                           v[None, :, sl], causal=True)[0]
+        assert float(jnp.max(jnp.abs(got[:, sl] - want))) < 1e-4
+        off += ln
+    if off < C:
+        assert float(jnp.max(jnp.abs(got[:, off:]))) == 0.0

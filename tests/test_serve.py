@@ -264,7 +264,8 @@ def test_kv_rebalance_logs_moved_bytes(tiny_model):
     assert len(sess.migration_log) >= 1
     for e in sess.migration_log:
         assert {"step", "TotalV", "imbalance", "retained", "moved_kv_bytes",
-                "n_moved", "deferred"} <= set(e)
+                "n_moved", "deferred", "deferred_retries"} <= set(e)
+        assert 0 <= e["deferred_retries"] <= e["n_moved"]
         assert e["moved_kv_bytes"] == e["n_moved"] * sess.kv_slot_bytes
     moved = sum(e["moved_kv_bytes"] for e in sess.migration_log)
     migrated = sum(r.migrations for r in reqs)
@@ -298,3 +299,149 @@ def test_bursty_trace_deterministic():
     assert all(len(x.prompt) in (4, 8, 16) for x in a)
     assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
     assert all(1 <= x.max_new <= 48 for x in a)
+
+
+# ---------------------------------------------------------------------------
+# Packed, paged prefill
+# ---------------------------------------------------------------------------
+
+def test_packed_spec_validation_and_roundtrip():
+    spec = ServeSpec(slots=4, groups=2, max_seq=32, prefill="packed",
+                     page_size=4)
+    assert spec.prefill_capacity == 32          # auto: capacity = max_seq
+    assert spec.prefill_pages == 8 and spec.max_packed_requests == 8
+    d = spec.to_dict()
+    assert d["prefill"] == "packed" and d["page_size"] == 4
+    assert ServeSpec.from_dict(d) == spec
+    explicit = ServeSpec(slots=4, groups=2, max_seq=32, prefill="packed",
+                         page_size=4, prefill_capacity=16, use_pallas=True,
+                         interpret=True)
+    assert ServeSpec.from_dict(explicit.to_dict()) == explicit
+    for bad in (dict(page_size=0),
+                dict(prefill_capacity=-1),
+                dict(use_pallas="yes"),
+                # max_seq must be page-aligned for the paged KV scatter
+                dict(prefill="packed", page_size=5, max_seq=32),
+                # capacity must be a positive page multiple
+                dict(prefill="packed", page_size=4, max_seq=32,
+                     prefill_capacity=10)):
+        with pytest.raises(ValueError):
+            ServeSpec(**bad)
+
+
+def test_packed_rejects_unsupported_models(tiny_model):
+    cfg, params = tiny_model
+    kw = dict(slots=4, groups=2, max_seq=32, prefill="packed", page_size=4,
+              decode="replicated", rebalance="never")
+    # SWA ring cache (S < max_seq): pages address absolute positions
+    with pytest.raises(ValueError, match="max_seq"):
+        ServeSession(params, cfg.replace(window=16), ServeSpec(**kw))
+    # recurrent state cannot be segment-masked in one packed forward
+    scfg = get_smoke("mamba2_1_3b")
+    with pytest.raises(ValueError, match="family"):
+        ServeSession(init_model(scfg, jax.random.PRNGKey(0)), scfg,
+                     ServeSpec(**kw))
+    # mrope carries multi-axis positions; the packed buffer is 1-D
+    vcfg = get_smoke("qwen2_vl_72b")
+    with pytest.raises(ValueError, match="mrope"):
+        ServeSession(init_model(vcfg, jax.random.PRNGKey(0)), vcfg,
+                     ServeSpec(**kw))
+
+
+@pytest.mark.parametrize("p", [2, 8])
+def test_packed_prefill_token_parity(tiny_model, p):
+    """The acceptance bar: packed admission produces BIT-IDENTICAL output
+    tokens to per-request 'full' prefill at p groups with mixed prompt
+    lengths, while tracing strictly fewer programs."""
+    cfg, params = tiny_model
+    prompts = [RNG.integers(1, cfg.vocab, s)
+               for s in (3, 5, 7, 9, 11, 6, 13, 4, 8, 10)]
+
+    def run(mode):
+        spec = ServeSpec(slots=2 * p, groups=p, max_seq=32, prefill=mode,
+                         page_size=4, decode="sharded", rebalance="kv",
+                         rebalance_every=4)
+        sess = ServeSession(params, cfg, spec)
+        reqs = [Request(rid=i, prompt=pr, max_new=4)
+                for i, pr in enumerate(prompts)]
+        for r in reqs:
+            sess.submit(r)
+        sess.run(max_steps=128)
+        assert all(r.done for r in reqs)
+        return sess, {r.rid: r.out for r in reqs}
+
+    full_sess, full_out = run("full")
+    packed_sess, packed_out = run("packed")
+    assert packed_out == full_out
+    # 10 requests over 6 distinct lengths: per-request traces a prefill
+    # program per length, packed traces ONE fixed-shape program
+    assert packed_sess.compile_count() < full_sess.compile_count()
+    st = packed_sess.prefill_stats
+    assert st["requests"] == len(prompts)
+    assert st["tokens"] == sum(len(pr) for pr in prompts)
+    assert st["calls"] < len(prompts)       # batched admission
+    assert st["buffer_tokens"] == st["calls"] * 32
+
+
+def test_packed_multi_pack_small_capacity(tiny_model):
+    """A buffer smaller than the admission wave forces several packs per
+    _admit; everything still completes with per-request parity."""
+    cfg, params = tiny_model
+    prompts = [RNG.integers(1, cfg.vocab, s) for s in (7, 6, 5, 8, 3, 4)]
+
+    def run(mode, **extra):
+        spec = ServeSpec(slots=8, groups=4, max_seq=32, prefill=mode,
+                         page_size=4, decode="sharded", rebalance="never",
+                         rebalance_every=1000, **extra)
+        sess = ServeSession(params, cfg, spec)
+        reqs = [Request(rid=i, prompt=pr, max_new=3)
+                for i, pr in enumerate(prompts)]
+        for r in reqs:
+            sess.submit(r)
+        sess.run(max_steps=64)
+        assert all(r.done for r in reqs)
+        return sess, {r.rid: r.out for r in reqs}
+
+    full_sess, full_out = run("full")
+    packed_sess, packed_out = run("packed", prefill_capacity=16)
+    assert packed_out == full_out
+    # aligned lengths 8+8+8+8+4+4 = 40 tokens through a 16-token buffer
+    assert packed_sess.prefill_stats["calls"] >= 3
+
+
+def test_packed_overlong_prompt_raises(tiny_model):
+    cfg, params = tiny_model
+    spec = ServeSpec(slots=4, groups=2, max_seq=32, prefill="packed",
+                     page_size=4, prefill_capacity=16, decode="sharded",
+                     rebalance="never", rebalance_every=1000)
+    sess = ServeSession(params, cfg, spec)
+    sess.submit(Request(rid=0, prompt=RNG.integers(1, cfg.vocab, 20),
+                        max_new=2))
+    with pytest.raises(ValueError, match="prefill_capacity"):
+        sess.step()
+
+
+def test_deferred_move_retry(tiny_model):
+    """A mover whose destination group has no free slot is deferred, kept
+    in _deferred_moves, and gets first pick (counted as a retry) once a
+    slot frees up -- never silently dropped."""
+    cfg, _ = tiny_model
+    sess = _kv_session(tiny_model, slots=2, groups=2)    # spg = 1
+    a = Request(rid=0, prompt=RNG.integers(1, cfg.vocab, 8), max_new=12)
+    b = Request(rid=1, prompt=RNG.integers(1, cfg.vocab, 8), max_new=12)
+    sess.submit(a)
+    sess.submit(b)
+    sess.step()
+    assert {a.group, b.group} == {0, 1}
+    lo, hi = (a, b) if a.group == 0 else (b, a)
+    # both groups full; ask the planner to move `lo` into group 1
+    moves, deferred, retried = sess._plan_moves(
+        sess._live(), np.asarray([1, 1], np.int32))
+    assert moves == [] and retried == 0
+    assert deferred == {lo.rid: 1} == sess._deferred_moves
+    # the occupant of group 1 finishes -> its slot frees up
+    sess.active[hi.slot] = None
+    moves, deferred, retried = sess._plan_moves(
+        [(lo.slot, lo)], np.asarray([1], np.int32))
+    assert moves == [(lo.slot, hi.slot)]
+    assert retried == 1 and deferred == {} and sess._deferred_moves == {}
